@@ -1,0 +1,35 @@
+"""Benchmark harness: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Prints ``name,us_per_call,derived`` CSV — one family per paper claim
+(translation overhead / incrementality / omni-direction / scaling) plus the
+compute-layer micro-benches. The roofline table (per arch x shape x mesh)
+is produced separately by ``repro.launch.dryrun`` + ``repro.launch.roofline``
+from compiled artifacts.
+"""
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import bench_kernels, bench_xtable
+
+    rows = []
+
+    def report(name: str, us: float, derived: str = "") -> None:
+        rows.append((name, us, derived))
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    print("name,us_per_call,derived")
+    for mod in (bench_xtable, bench_kernels):
+        for bench in mod.ALL:
+            try:
+                bench(report)
+            except Exception as e:  # keep the harness honest but resilient
+                print(f"{mod.__name__}.{bench.__name__},FAIL,{e}",
+                      file=sys.stderr)
+                raise
+    print(f"# {len(rows)} benchmarks ok", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.checkpoint.manager import LSTCheckpointManager
+
+__all__ = ["LSTCheckpointManager"]

@@ -1,0 +1,19 @@
+"""XTABLE core: omni-directional, incremental LST metadata translation.
+
+The paper's contribution, implemented as described in §3: source readers and
+target writers around a unified internal representation, orchestrated by the
+core sync logic with persisted state, caching, and telemetry.
+"""
+
+from repro.core.config import DatasetConfig, SyncConfig
+from repro.core.ir import (InternalDataFile, InternalSnapshot, InternalTable,
+                           TableChange)
+from repro.core.sources import make_source
+from repro.core.sync import SyncResult, XTableSyncer, run_sync
+from repro.core.targets import make_target
+from repro.core.telemetry import Telemetry
+
+__all__ = ["DatasetConfig", "SyncConfig", "InternalDataFile",
+           "InternalSnapshot", "InternalTable", "TableChange", "make_source",
+           "make_target", "run_sync", "SyncResult", "XTableSyncer",
+           "Telemetry"]

@@ -1,0 +1,72 @@
+"""Sync configuration — the paper's Listing 2.
+
+::
+
+    sourceFormat: HUDI
+    targetFormats:
+      - DELTA
+      - ICEBERG
+    datasets:
+      -
+        tableBasePath: abfs://container@ac.dfs.core.windows.net/sales
+
+Accepts YAML text, a file path, or a plain dict.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.lst.fs import strip_scheme
+
+KNOWN_FORMATS = ("delta", "iceberg", "hudi")
+
+
+@dataclass(frozen=True)
+class DatasetConfig:
+    table_base_path: str
+    table_name: str | None = None
+
+    @property
+    def path(self) -> str:
+        return strip_scheme(self.table_base_path)
+
+    @property
+    def name(self) -> str:
+        return self.table_name or self.path.rstrip("/").rsplit("/", 1)[-1]
+
+
+@dataclass(frozen=True)
+class SyncConfig:
+    source_format: str
+    target_formats: tuple
+    datasets: tuple
+    incremental: bool = True      # prefer incremental, fall back to full
+
+    def __post_init__(self):
+        for f in (self.source_format, *self.target_formats):
+            if f not in KNOWN_FORMATS:
+                raise ValueError(f"unknown format {f!r}; known: {KNOWN_FORMATS}")
+        if self.source_format in self.target_formats:
+            raise ValueError("source format cannot also be a target")
+
+    @staticmethod
+    def from_dict(d: dict) -> "SyncConfig":
+        datasets = tuple(
+            DatasetConfig(x["tableBasePath"], x.get("tableName"))
+            for x in d.get("datasets", []))
+        return SyncConfig(
+            source_format=d["sourceFormat"].lower(),
+            target_formats=tuple(t.lower() for t in d["targetFormats"]),
+            datasets=datasets,
+            incremental=bool(d.get("incremental", True)))
+
+    @staticmethod
+    def from_yaml(text: str) -> "SyncConfig":
+        import yaml
+        return SyncConfig.from_dict(yaml.safe_load(text))
+
+    @staticmethod
+    def from_file(path: str) -> "SyncConfig":
+        with open(path) as f:
+            return SyncConfig.from_yaml(f.read())

@@ -1,0 +1,81 @@
+"""XTable's Unified Internal Representation (paper §3, "Extensible").
+
+The IR is the hub of the hub-and-spoke design: source readers produce it,
+target writers consume it, and no format ever needs to know about another.
+Adding format N+1 costs one reader + one writer instead of 2N translators.
+
+The IR deliberately captures the *intersection semantics* the paper
+identifies as shared across Delta/Iceberg/Hudi metadata layers:
+schema, partition spec, versioned file lists with per-column statistics,
+and per-commit change sets (adds/removes).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.lst.chunkfile import ColumnStats, DataFileMeta
+from repro.lst.schema import PartitionSpec, Schema
+
+# Schema / PartitionSpec / ColumnStats are format-neutral already; the IR
+# adopts them as its canonical vocabulary.
+InternalSchema = Schema
+InternalPartitionSpec = PartitionSpec
+InternalColumnStats = ColumnStats
+
+
+@dataclass(frozen=True)
+class InternalDataFile:
+    """One immutable data file as the IR sees it (format-independent)."""
+    physical_path: str            # relative to the table base path
+    file_size_bytes: int
+    record_count: int
+    partition_values: dict = field(default_factory=dict)
+    column_stats: dict = field(default_factory=dict)   # name -> ColumnStats
+    extra: dict = field(default_factory=dict)
+
+    @staticmethod
+    def from_meta(m: DataFileMeta) -> "InternalDataFile":
+        return InternalDataFile(m.path, m.size_bytes, m.record_count,
+                                dict(m.partition_values), dict(m.column_stats),
+                                dict(m.extra))
+
+    def to_meta(self) -> DataFileMeta:
+        return DataFileMeta(self.physical_path, self.file_size_bytes,
+                            self.record_count, dict(self.partition_values),
+                            dict(self.column_stats), dict(self.extra))
+
+
+@dataclass(frozen=True)
+class InternalSnapshot:
+    """Full table state at one source commit (drives FULL sync)."""
+    source_format: str
+    source_commit: str            # format-native commit/snapshot/instant id
+    timestamp_ms: int
+    schema: InternalSchema
+    partition_spec: InternalPartitionSpec
+    files: tuple                  # tuple[InternalDataFile]
+    properties: dict = field(default_factory=dict)
+
+    def file_paths(self) -> set[str]:
+        return {f.physical_path for f in self.files}
+
+
+@dataclass(frozen=True)
+class TableChange:
+    """One source commit's delta (drives INCREMENTAL sync)."""
+    source_format: str
+    source_commit: str
+    timestamp_ms: int
+    operation: str
+    adds: tuple                   # tuple[InternalDataFile]
+    removes: tuple                # tuple[str] — physical paths
+    schema: InternalSchema | None = None   # set when the commit evolved schema
+    extra: dict = field(default_factory=dict)  # source commit user-metadata
+
+
+@dataclass(frozen=True)
+class InternalTable:
+    """Static identity of a dataset under translation."""
+    base_path: str
+    name: str = "table"

@@ -1,0 +1,141 @@
+"""Source readers (paper §3.1): format -> Unified Internal Representation.
+
+One reader per LST format. Each uses the format's own access layer (the way
+real XTable links the Delta Kernel / Iceberg API / Hudi client) and emits IR
+snapshots and per-commit change sets. Readers are cached by the core logic so
+multiple targets share one pass over source metadata.
+"""
+
+from __future__ import annotations
+
+from typing import Protocol
+
+from repro.core.ir import InternalDataFile, InternalSnapshot, TableChange
+from repro.lst.delta import DeltaTable
+from repro.lst.hudi import HudiTable
+from repro.lst.iceberg import IcebergTable
+
+
+class ConversionSource(Protocol):
+    format: str
+
+    def current_commit(self) -> str: ...
+    def get_snapshot(self, commit: str | None = None) -> InternalSnapshot: ...
+    def get_commits_since(self, token: str | None) -> list[str]: ...
+    def get_changes(self, commit: str) -> TableChange: ...
+    def has_commit(self, token: str) -> bool: ...
+
+
+class _HandleSource:
+    """Shared implementation over the common format-handle protocol."""
+
+    handle_cls = None
+    format = "?"
+
+    def __init__(self, fs, base_path: str):
+        self.fs = fs
+        self.base = base_path
+        self.handle = self.handle_cls.open(fs, base_path)
+        self._change_cache: dict[str, TableChange] = {}
+
+    # -- snapshots ---------------------------------------------------------
+    def current_commit(self) -> str:
+        return self.handle.current_version()
+
+    def get_snapshot(self, commit: str | None = None) -> InternalSnapshot:
+        st = self.handle.snapshot(commit)
+        props = dict(st.properties)
+        props.update(self._latest_commit_meta())
+        return InternalSnapshot(
+            source_format=self.format, source_commit=st.version,
+            timestamp_ms=st.timestamp_ms, schema=st.schema,
+            partition_spec=st.partition_spec,
+            files=tuple(InternalDataFile.from_meta(f)
+                        for f in st.files.values()),
+            properties=props)
+
+    def _latest_commit_meta(self) -> dict:
+        """User metadata of the head commit (carried into targets)."""
+        versions = self.handle.versions()
+        if not versions:
+            return {}
+        try:
+            return self.get_changes(versions[-1]).extra
+        except Exception:
+            return {}
+
+    # -- incremental -------------------------------------------------------
+    def get_commits_since(self, token: str | None) -> list[str]:
+        versions = self.handle.versions()
+        if token is None:
+            return versions
+        if token not in versions:
+            raise KeyError(f"token {token} not in source history")
+        return versions[versions.index(token) + 1:]
+
+    def has_commit(self, token: str) -> bool:
+        return token in self.handle.versions()
+
+    def get_changes(self, commit: str) -> TableChange:
+        if commit in self._change_cache:
+            return self._change_cache[commit]
+        adds, removes, op, info = self.handle.changes(commit)
+        # schema may have evolved at this commit; record the schema-as-of
+        schema = self.handle.snapshot(commit).schema
+        extra = {k: v for k, v in (info or {}).items()
+                 if isinstance(v, str) and not k.startswith("xtable.")
+                 and k not in ("schema", "timestamp", "operation")}
+        ch = TableChange(
+            source_format=self.format, source_commit=commit,
+            timestamp_ms=self.handle.snapshot(commit).timestamp_ms,
+            operation=op,
+            adds=tuple(InternalDataFile.from_meta(f) for f in adds),
+            removes=tuple(removes), schema=schema, extra=extra)
+        self._change_cache[commit] = ch
+        return ch
+
+
+class DeltaSource(_HandleSource):
+    handle_cls = DeltaTable
+    format = "delta"
+
+
+class IcebergSource(_HandleSource):
+    handle_cls = IcebergTable
+    format = "iceberg"
+
+    def get_commits_since(self, token: str | None) -> list[str]:
+        # iceberg "-1" denotes the empty pre-first-snapshot state
+        versions = self.handle.versions()
+        if token in (None, "-1"):
+            return versions
+        if token not in versions:
+            raise KeyError(f"token {token} not in source history")
+        return versions[versions.index(token) + 1:]
+
+    def has_commit(self, token: str) -> bool:
+        return token == "-1" or token in self.handle.versions()
+
+
+class HudiSource(_HandleSource):
+    handle_cls = HudiTable
+    format = "hudi"
+
+    def has_commit(self, token: str) -> bool:
+        # "0" denotes the empty pre-first-instant state
+        return token == "0" or token in self.handle.versions()
+
+    def get_commits_since(self, token: str | None) -> list[str]:
+        versions = self.handle.versions()
+        if token in (None, "0"):
+            return versions
+        if token not in versions:
+            raise KeyError(f"token {token} not in source history")
+        return versions[versions.index(token) + 1:]
+
+
+SOURCES = {"delta": DeltaSource, "iceberg": IcebergSource, "hudi": HudiSource}
+
+
+def make_source(fmt: str, fs, base_path: str) -> ConversionSource:
+    return SOURCES[fmt](fs, base_path)

@@ -1,0 +1,122 @@
+"""XTable core logic (paper §3.1): orchestrates the translation.
+
+Responsibilities, per the paper: initializing components, managing sources
+and targets, caching for efficiency, state management for recovery and
+incremental processing, telemetry for monitoring.
+
+Sync decision per target:
+
+* target has no sync state            -> FULL snapshot sync
+* target's token missing from source  -> FULL (history cleaned / diverged)
+* otherwise                           -> INCREMENTAL, commit-by-commit
+
+Both paths are idempotent: rerunning a sync that is already current is a
+no-op (``skip``), and a crash between two targets leaves each target either
+untouched or atomically advanced — recovery is simply "run it again",
+because the sync state lives inside each target's own atomic commit.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+from repro.core.config import DatasetConfig, SyncConfig
+from repro.core.sources import ConversionSource, make_source
+from repro.core.targets import make_target
+from repro.core.telemetry import Telemetry
+from repro.lst.fs import LocalFS
+
+
+@dataclass
+class SyncResult:
+    dataset: str
+    target_format: str
+    mode: str                  # FULL | INCREMENTAL | SKIP | ERROR
+    commits_synced: int = 0
+    source_commit: str | None = None
+    elapsed_s: float = 0.0
+    error: str | None = None
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
+
+
+@dataclass
+class XTableSyncer:
+    config: SyncConfig
+    fs: object = None
+    telemetry: Telemetry = field(default_factory=Telemetry)
+
+    def __post_init__(self):
+        self.fs = self.fs or LocalFS()
+
+    # ------------------------------------------------------------------ api
+    def run(self) -> list[SyncResult]:
+        results = []
+        for ds in self.config.datasets:
+            results.extend(self.sync_dataset(ds))
+        return results
+
+    def sync_dataset(self, ds: DatasetConfig) -> list[SyncResult]:
+        source = make_source(self.config.source_format, self.fs, ds.path)
+        head = source.current_commit()
+        results = []
+        for tf in self.config.target_formats:
+            t0 = time.perf_counter()
+            try:
+                r = self._sync_one(ds, source, head, tf)
+            except Exception as e:  # a failing target must not poison others
+                self.telemetry.bump("sync.errors")
+                self.telemetry.record(ds.name, tf, "error", str(e))
+                r = SyncResult(ds.name, tf, "ERROR", error=str(e))
+            r.elapsed_s = time.perf_counter() - t0
+            results.append(r)
+        return results
+
+    # ------------------------------------------------------------- internals
+    def _sync_one(self, ds: DatasetConfig, source: ConversionSource,
+                  head: str, target_format: str) -> SyncResult:
+        target = make_target(target_format, self.fs, ds.path)
+        token = target.get_sync_token()
+        src_fmt_on_target = target.get_sync_source_format()
+
+        if token == head and src_fmt_on_target == source.format:
+            self.telemetry.bump("sync.skipped")
+            self.telemetry.record(ds.name, target_format, "skip",
+                                  f"already at {head}")
+            return SyncResult(ds.name, target_format, "SKIP",
+                              source_commit=head)
+
+        use_incremental = (
+            self.config.incremental
+            and token is not None
+            and src_fmt_on_target == source.format
+            and source.has_commit(token))
+
+        if not use_incremental:
+            with self.telemetry.timed(ds.name, target_format, "full",
+                                      f"to {head}"):
+                snapshot = source.get_snapshot()   # head snapshot (cached read)
+                target.full_sync(snapshot)
+            self.telemetry.bump("sync.full")
+            return SyncResult(ds.name, target_format, "FULL", 1, head)
+
+        commits = source.get_commits_since(token)
+        n = 0
+        for c in commits:
+            change = source.get_changes(c)   # cached across targets
+            with self.telemetry.timed(ds.name, target_format, "incremental",
+                                      f"commit {c}"):
+                target.incremental_sync(change)
+            n += 1
+        self.telemetry.bump("sync.incremental", n)
+        return SyncResult(ds.name, target_format, "INCREMENTAL", n, head)
+
+
+def run_sync(config: SyncConfig, fs=None,
+             telemetry: Telemetry | None = None) -> list[SyncResult]:
+    """One-shot entry point (the CLI / background-process body)."""
+    syncer = XTableSyncer(config, fs, telemetry or Telemetry())
+    return syncer.run()

@@ -1,0 +1,136 @@
+"""Target writers (paper §3.1): Unified Internal Representation -> format.
+
+Mirror images of the source readers. A target writer materializes IR
+snapshots/changes as native metadata of its format, *referencing the same
+data files* (metadata-only translation — the paper's low-overhead property).
+
+Sync state (which source commit the target reflects) is persisted **in the
+target's own metadata layer**, exactly as real XTable does: Delta table
+configuration, Iceberg table properties / snapshot summary, Hudi commit
+``extraMetadata``. That makes incremental sync recoverable from the target
+alone — there is no side database to lose.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Protocol
+
+from repro.core.ir import InternalSnapshot, TableChange
+from repro.lst.delta import DeltaTable
+from repro.lst.hudi import HudiTable
+from repro.lst.iceberg import IcebergTable
+
+TOKEN_KEY = "xtable.lastSyncedSourceCommit"
+SOURCE_FMT_KEY = "xtable.sourceFormat"
+MODE_KEY = "xtable.lastSyncMode"
+
+
+class ConversionTarget(Protocol):
+    format: str
+
+    def get_sync_token(self) -> str | None: ...
+    def full_sync(self, snapshot: InternalSnapshot) -> str: ...
+    def incremental_sync(self, change: TableChange) -> str: ...
+
+
+class _HandleTarget:
+    handle_cls = None
+    format = "?"
+
+    def __init__(self, fs, base_path: str):
+        self.fs = fs
+        self.base = base_path
+        self.handle = (self.handle_cls.open(fs, base_path)
+                       if self.handle_cls.exists(fs, base_path) else None)
+
+    # -- sync-state bookkeeping (stored in target-native metadata) ---------
+    def get_sync_token(self) -> str | None:
+        if self.handle is None:
+            return None
+        return self._read_state().get(TOKEN_KEY)
+
+    def get_sync_source_format(self) -> str | None:
+        if self.handle is None:
+            return None
+        return self._read_state().get(SOURCE_FMT_KEY)
+
+    def _read_state(self) -> dict:
+        return self.handle.properties()
+
+    def _state_props(self, src: InternalSnapshot | TableChange, mode: str) -> dict:
+        return {TOKEN_KEY: src.source_commit,
+                SOURCE_FMT_KEY: src.source_format, MODE_KEY: mode}
+
+    # -- initialization -----------------------------------------------------
+    def _ensure_table(self, schema, partition_spec) -> None:
+        if self.handle is None:
+            self.handle = self.handle_cls.create(
+                self.fs, self.base, schema, partition_spec, {})
+
+    # -- FULL: reconcile target state to exactly the snapshot ---------------
+    def full_sync(self, snapshot: InternalSnapshot) -> str:
+        self._ensure_table(snapshot.schema, snapshot.partition_spec)
+        cur = self.handle.snapshot()
+        cur_paths = set(cur.files)
+        want = {f.physical_path: f for f in snapshot.files}
+        removes = sorted(cur_paths - set(want))
+        adds = [f.to_meta() for p, f in sorted(want.items())
+                if p not in cur_paths]
+        schema = None if cur.schema.logical_eq(snapshot.schema) \
+            else snapshot.schema
+        carried = {k: v for k, v in snapshot.properties.items()
+                   if not k.startswith("xtable.")}
+        props = {**carried, **self._state_props(snapshot, "FULL")}
+        return self.handle.commit(
+            adds, removes, schema=schema,
+            properties=props,
+            operation="xtable-full-sync",
+            extra_meta=props)
+
+    # -- INCREMENTAL: replay one source commit -------------------------------
+    def incremental_sync(self, change: TableChange) -> str:
+        if self.handle is None:
+            raise RuntimeError("incremental sync on uninitialized target")
+        cur_schema = self.handle.snapshot().schema
+        schema = None
+        if change.schema is not None and not cur_schema.logical_eq(change.schema):
+            schema = change.schema
+        props = {**change.extra, **self._state_props(change, "INCREMENTAL")}
+        return self.handle.commit(
+            [f.to_meta() for f in change.adds], list(change.removes),
+            schema=schema, properties=props,
+            operation=f"xtable-incr-{change.operation}",
+            extra_meta=props)
+
+
+class DeltaTarget(_HandleTarget):
+    handle_cls = DeltaTable
+    format = "delta"
+
+
+class IcebergTarget(_HandleTarget):
+    handle_cls = IcebergTable
+    format = "iceberg"
+
+
+class HudiTarget(_HandleTarget):
+    handle_cls = HudiTable
+    format = "hudi"
+
+    def _read_state(self) -> dict:
+        # hudi keeps sync state in the latest commit's extraMetadata
+        em = self.handle.latest_extra_metadata()
+        props = self.handle.properties()
+        out = dict(props)
+        for k in (TOKEN_KEY, SOURCE_FMT_KEY, MODE_KEY):
+            if k in em:
+                out[k] = em[k] if not em[k].startswith('"') else json.loads(em[k])
+        return out
+
+
+TARGETS = {"delta": DeltaTarget, "iceberg": IcebergTarget, "hudi": HudiTarget}
+
+
+def make_target(fmt: str, fs, base_path: str) -> ConversionTarget:
+    return TARGETS[fmt](fs, base_path)

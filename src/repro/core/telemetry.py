@@ -1,0 +1,51 @@
+"""Telemetry for the core logic (paper §3.1: "telemetry for monitoring").
+
+Feeds the demo's "timeline view of XTable events and the work done"
+utility: every sync phase is recorded with wall time and work counters.
+"""
+
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Event:
+    ts_ms: int
+    dataset: str
+    target: str
+    phase: str          # plan | full | incremental | skip | error
+    detail: str = ""
+    elapsed_s: float = 0.0
+
+
+@dataclass
+class Telemetry:
+    events: list = field(default_factory=list)
+    counters: dict = field(default_factory=dict)
+
+    def bump(self, key: str, n: int = 1) -> None:
+        self.counters[key] = self.counters.get(key, 0) + n
+
+    def record(self, dataset: str, target: str, phase: str, detail: str = "",
+               elapsed_s: float = 0.0) -> None:
+        self.events.append(Event(time.time_ns() // 1_000_000, dataset, target,
+                                 phase, detail, elapsed_s))
+
+    @contextmanager
+    def timed(self, dataset: str, target: str, phase: str, detail: str = ""):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.record(dataset, target, phase, detail,
+                        time.perf_counter() - t0)
+
+    def timeline(self) -> list[str]:
+        return [f"[{e.ts_ms}] {e.dataset} -> {e.target}: {e.phase} "
+                f"{e.detail} ({e.elapsed_s * 1e3:.2f} ms)" for e in self.events]
+
+    def summary(self) -> dict:
+        return dict(self.counters)

@@ -1,0 +1,4 @@
+from repro.data.pipeline import LakeDataLoader
+from repro.data.synth import write_synth_corpus
+
+__all__ = ["LakeDataLoader", "write_synth_corpus"]

@@ -1,0 +1,107 @@
+"""Flash-decode Pallas TPU kernel: one query token vs. a long KV cache.
+
+Grid: (batch, head, k_blocks) — the k sweep is innermost and sequential on
+TPU, so the online-softmax state lives in VMEM scratch (same structure as
+the prefill kernel but with a (1, dh) query tile; the MXU work per block is
+a (bk, dh) x (dh,) matvec batched over the 8-sublane q replication).
+
+The valid prefix length arrives via scalar prefetch (SMEM) so block masks
+are computed without streaming a position tensor from HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BK = 256
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            window: int, softcap: float, scale: float, bk: int, nk: int):
+    bi = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[bi]
+    k_lo = ki * bk
+    run = k_lo < length
+    if window:
+        run &= (k_lo + bk) > jnp.maximum(length - window, 0)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0, :].astype(jnp.float32) * scale       # (dh,)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bk, dh)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jnp.sum(k * q[None, :], axis=1)                  # (bk,)
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bk,), 0)
+        mask = kpos < length
+        if window:
+            mask &= kpos >= (length - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[0]
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[0] = l_ref[0] * alpha + jnp.sum(p)
+        acc_ref[...] = acc_ref[...] * alpha + \
+            jnp.sum(p[:, None] * v, axis=0, keepdims=True)
+        m_ref[0] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, 0, :] = (acc_ref[0] /
+                          jnp.maximum(l_ref[0], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, window: int = 0,
+                     softcap: float = 0.0, bk: int = DEFAULT_BK,
+                     interpret: bool = False):
+    """q: (b, h, dh); k/v_cache: (b, S, kv, dh); lengths: (b,) -> (b, h, dh)."""
+    b, h, dh = q.shape
+    S, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    bk = min(bk, S)
+    nk = -(-S // bk)
+    scale = 1.0 / math.sqrt(dh)
+
+    kern = functools.partial(_kernel, window=window, softcap=softcap,
+                             scale=scale, bk=bk, nk=nk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, h, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, dh), lambda b_, h_, k_, lens: (b_, h_, 0)),
+            pl.BlockSpec((1, bk, 1, dh),
+                         lambda b_, h_, k_, lens: (b_, k_, h_ // g, 0)),
+            pl.BlockSpec((1, bk, 1, dh),
+                         lambda b_, h_, k_, lens: (b_, k_, h_ // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dh),
+                               lambda b_, h_, k_, lens: (b_, h_, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(lengths, q, k_cache, v_cache)

@@ -1,0 +1,17 @@
+"""Jitted public wrapper for the decode attention kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention
+
+
+@partial(jax.jit, static_argnames=("window", "softcap", "bk", "interpret"))
+def decode_attention_op(q, k_cache, v_cache, lengths, *, window: int = 0,
+                        softcap: float = 0.0, bk: int = 256,
+                        interpret: bool = False):
+    return decode_attention(q, k_cache, v_cache, lengths, window=window,
+                            softcap=softcap, bk=bk, interpret=interpret)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the decode attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths, *, window: int = 0,
+                         softcap: float = 0.0):
+    """q: (b, h, dh); k/v_cache: (b, S, kv, dh); lengths: (b,) valid prefix.
+
+    Attends to cache positions [max(0, len-window), len) per sequence.
+    """
+    b, h, dh = q.shape
+    S, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    kh = jnp.repeat(k_cache, g, axis=2) if g > 1 else k_cache
+    vh = jnp.repeat(v_cache, g, axis=2) if g > 1 else v_cache
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(f32), kh.astype(f32))
+    s = s / jnp.sqrt(jnp.asarray(dh, f32))
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    pos = jnp.arange(S)[None, :]
+    valid = pos < lengths[:, None]
+    if window:
+        valid &= pos >= (lengths[:, None] - window)
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p, vh.astype(f32)).astype(q.dtype)

@@ -1,0 +1,19 @@
+"""Jitted public wrapper for the flash attention kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap", "bq", "bk",
+                                   "interpret"))
+def flash_attention_op(q, k, v, *, causal: bool = True, window: int = 0,
+                       softcap: float = 0.0, bq: int = 128, bk: int = 128,
+                       interpret: bool = False):
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           softcap=softcap, bq=bq, bk=bk,
+                           interpret=interpret)

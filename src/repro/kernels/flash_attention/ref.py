@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+f32 = jnp.float32
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  softcap: float = 0.0):
+    """q: (b, sq, h, dh); k/v: (b, sk, kv, dh) -> (b, sq, h, dh)."""
+    b, sq, h, dh = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    kh = jnp.repeat(k, g, axis=2) if g > 1 else k
+    vh = jnp.repeat(v, g, axis=2) if g > 1 else v
+    s = jnp.einsum("bqhd,bshd->bhqs", q.astype(f32), kh.astype(f32))
+    s = s / jnp.sqrt(jnp.asarray(dh, f32))
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+        if window:
+            mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqs,bshd->bqhd", p, vh.astype(f32)).astype(q.dtype)

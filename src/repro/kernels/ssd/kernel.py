@@ -1,0 +1,119 @@
+"""SSD (Mamba-2 state-space duality) chunk-scan Pallas TPU kernel.
+
+Grid: (batch, head, chunks) — chunks innermost and sequential, so the
+inter-chunk state S (n x p) lives in VMEM scratch and is carried across
+grid steps (the TPU analogue of mamba2's persistent-state triton kernel;
+sequential grid order replaces the GPU's software pipelining).
+
+Per chunk (length Q):
+  intra:  Y += ((C B^T) o L) (dt * x)      L = masked cumulative decay
+  inter:  Y += (C o exp(cum)) S_prev
+  state:  S  = S_prev * exp(total) + B^T ((dt * x) o exp(total - cum))
+
+All contractions are (Q x n)(n x Q)/(Q x Q)(Q x p) MXU shapes with Q, n, p
+multiples of the 128-lane granule at production sizes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_out_ref, state_ref,
+            *, q: int, nc: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)        # (Q, p)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)      # (Q,)
+    A = a_ref[0].astype(jnp.float32)              # ()
+    B = b_ref[0, 0, 0].astype(jnp.float32)        # (Q, n)
+    C = c_ref[0, 0, 0].astype(jnp.float32)        # (Q, n)
+
+    dA = dt * A                                   # (Q,) negative
+    cum = jnp.cumsum(dA)                          # (Q,)
+    total = cum[-1]
+
+    # ---- intra-chunk (quadratic in Q) ----
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())))      # (Q,Q)
+    diff = cum[:, None] - cum[None, :]                             # (Q,Q)
+    iq = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    ik = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    L = jnp.where(ik <= iq, jnp.exp(diff), 0.0)
+    xdt = x * dt[:, None]                                          # (Q,p)
+    y = jax.lax.dot_general(cb * L, xdt, (((1,), (0,)), ((), ())))
+
+    # ---- inter-chunk ----
+    s_prev = state_ref[...]                                        # (n,p)
+    y += jax.lax.dot_general(C * jnp.exp(cum)[:, None], s_prev,
+                             (((1,), (0,)), ((), ())))
+
+    # ---- state update ----
+    w = jnp.exp(total - cum)                                       # (Q,)
+    bx = jax.lax.dot_general(B, xdt * w[:, None],
+                             (((0,), (0,)), ((), ())))             # (n,p)
+    state_ref[...] = s_prev * jnp.exp(total) + bx
+
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        s_out_ref[0, 0] = state_ref[...]
+
+
+def ssd_chunk_scan(x, dt, A, B, C, *, chunk: int = 256,
+                   interpret: bool = False):
+    """x: (b, s, h, p); dt: (b, s, h); A: (h,); B/C: (b, s, g, n).
+
+    Returns (y: (b, s, h, p), final_state: (b, h, n, p)).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hpg = h // g
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    # (b, nc, Q, ...) chunked layouts, head-major for clean block addressing
+    xc = x.reshape(b, nc, q, h, p).transpose(0, 3, 1, 2, 4)    # (b,h,nc,Q,p)
+    dtc = dt.reshape(b, nc, q, h).transpose(0, 3, 1, 2)        # (b,h,nc,Q)
+    Bc = B.reshape(b, nc, q, g, n).transpose(0, 3, 1, 2, 4)    # (b,g,nc,Q,n)
+    Cc = C.reshape(b, nc, q, g, n).transpose(0, 3, 1, 2, 4)
+
+    kern = functools.partial(_kernel, q=q, nc=nc)
+    y, state = pl.pallas_call(
+        kern,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, q, p),
+                         lambda b_, h_, c_: (b_, h_, c_, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q),
+                         lambda b_, h_, c_: (b_, h_, c_, 0)),
+            pl.BlockSpec((1,), lambda b_, h_, c_: (h_,)),
+            pl.BlockSpec((1, 1, 1, q, n),
+                         lambda b_, h_, c_: (b_, h_ // hpg, c_, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q, n),
+                         lambda b_, h_, c_: (b_, h_ // hpg, c_, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, q, p),
+                         lambda b_, h_, c_: (b_, h_, c_, 0, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda b_, h_, c_: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, nc, q, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(xc, dtc, A, Bc, Cc)
+    y = y.transpose(0, 2, 3, 1, 4).reshape(b, s, h, p)
+    return y, state

@@ -1,0 +1,14 @@
+"""Jitted public wrapper for the SSD chunk-scan kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.ssd.kernel import ssd_chunk_scan
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_op(x, dt, A, B, C, *, chunk: int = 256, interpret: bool = False):
+    return ssd_chunk_scan(x, dt, A, B, C, chunk=chunk, interpret=interpret)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the SSD (Mamba-2) chunk-scan kernel.
+
+Direct (non-chunked) O(s^2)-free recurrence: sequential state update per
+position — the ground truth both the kernel and the chunked XLA path
+(models/ssm.py) must match.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+def ssd_ref(x, dt, A, B, C):
+    """Sequential SSD recurrence.
+
+    x: (b, s, h, p); dt: (b, s, h); A: (h,) (negative); B/C: (b, s, g, n).
+    Returns y: (b, s, h, p) with y_t = C_t . S_t,
+    S_t = S_{t-1} * exp(dt_t A) + dt_t B_t (x) x_t.
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hpg = h // g
+
+    Bh = jnp.repeat(B, hpg, axis=2) if g > 1 else \
+        jnp.broadcast_to(B, (b, s, h, n))
+    Ch = jnp.repeat(C, hpg, axis=2) if g > 1 else \
+        jnp.broadcast_to(C, (b, s, h, n))
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                      # (b,h,p),(b,h),(b,h,n),..
+        decay = jnp.exp(dtt * A[None, :])          # (b,h)
+        upd = dtt[..., None, None] * bt[..., :, None] * xt[..., None, :]
+        state = state * decay[..., None, None] + upd
+        y = jnp.einsum("bhn,bhnp->bhp", ct, state)
+        return state, y
+
+    init = jnp.zeros((b, h, n, p), f32)
+    xs = (jnp.moveaxis(x.astype(f32), 1, 0), jnp.moveaxis(dt.astype(f32), 1, 0),
+          jnp.moveaxis(Bh.astype(f32), 1, 0), jnp.moveaxis(Ch.astype(f32), 1, 0))
+    final, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1), final

@@ -1,0 +1,35 @@
+"""Production meshes.
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod:  2 pods x 256 chips as (pod=2, data=16, model=16) — the ``pod``
+axis is pure data parallelism whose gradient all-reduce crosses DCN once per
+step; everything else stays inside a pod's ICI.
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host has (tests / examples): 1D data mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
+def pod_size(mesh) -> int | None:
+    """Devices per pod (for DCN/ICI classification); None if single pod."""
+    if "pod" in mesh.axis_names:
+        i = mesh.axis_names.index("pod")
+        per_pod = mesh.devices.size // mesh.devices.shape[i]
+        return per_pod
+    return None

@@ -1,0 +1,176 @@
+"""Roofline terms from dry-run artifacts (TPU v5e targets).
+
+Per (arch x shape x mesh) record produced by ``launch.dryrun``:
+
+    compute_s    = FLOPs_per_device   / 197e12      (bf16 peak / chip)
+    memory_s     = HBM_bytes_per_dev  / 819e9       (HBM bandwidth / chip)
+    ici_s        = ICI coll bytes/dev / 50e9        (per-link ICI)
+    dcn_s        = DCN coll bytes/dev / 6.25e9      (~50 Gbps/chip DCN, stated
+                                                     assumption for cross-pod)
+
+The dominant term is the bottleneck; roofline fraction = compute_s /
+max(terms) (1.0 = perfectly compute-bound). ``MODEL_FLOPS`` uses 6·N·D for
+training and 2·N·D for inference steps (N = active params for MoE), and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs exposes remat/dispatch/causal
+waste.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+DCN_BW = 6.25e9            # bytes/s / chip (assumed 50 Gbps)
+CHIPS = {"pod1": 256, "pod2": 512}
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    step: str
+    compute_s: float
+    memory_s: float
+    ici_s: float
+    dcn_s: float
+    model_flops_dev: float
+    hlo_flops_dev: float
+    mem_gib: float
+    attn_hbm_bytes: float = 0.0
+
+    @property
+    def memory_kernel_s(self) -> float:
+        """Memory term with the Pallas flash kernel (attention
+        score/prob HBM round trips stay in VMEM)."""
+        return max(self.memory_s - self.attn_hbm_bytes / HBM_BW, 0.0)
+
+    @property
+    def kernel_step_time_s(self) -> float:
+        return max(self.compute_s, self.memory_kernel_s, self.ici_s,
+                   self.dcn_s)
+
+    @property
+    def kernel_roofline_frac(self) -> float:
+        t = self.kernel_step_time_s
+        return self.compute_s / t if t else 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "ici": self.ici_s, "dcn": self.dcn_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.ici_s, self.dcn_s)
+
+    @property
+    def roofline_frac(self) -> float:
+        return self.compute_s / self.step_time_s if self.step_time_s else 0.0
+
+    @property
+    def useful_ratio(self) -> float:
+        return (self.model_flops_dev / self.hlo_flops_dev
+                if self.hlo_flops_dev else 0.0)
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline-predicted step time."""
+        if not self.step_time_s:
+            return 0.0
+        return self.model_flops_dev / (self.step_time_s * PEAK_FLOPS)
+
+
+def from_record(rec: dict) -> Roofline | None:
+    if not rec.get("ok"):
+        return None
+    h = rec["hlo"]
+    chips = CHIPS[rec["mesh"]]
+    mult = 6.0 if rec["step"] == "train_step" else 2.0
+    n = rec["n_active_params"]
+    model_flops = mult * n * rec["tokens_per_step"] / chips
+    return Roofline(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        step=rec["step"],
+        compute_s=h["flops"] / PEAK_FLOPS,
+        memory_s=h["hbm_bytes"] / HBM_BW,
+        ici_s=h["coll_ici_bytes"] / ICI_BW,
+        dcn_s=h["coll_dcn_bytes"] / DCN_BW,
+        model_flops_dev=model_flops,
+        hlo_flops_dev=h["flops"],
+        mem_gib=rec["memory"]["peak_bytes_est"] / 2**30,
+        attn_hbm_bytes=rec.get("attn_hbm_bytes", 0.0),
+    )
+
+
+ADVICE = {
+    "compute": "compute-bound: reduce HLO waste (remat policy, causal/block "
+               "skipping, dispatch einsums) or accept — this is the target.",
+    "memory": "HBM-bound: increase arithmetic intensity (fuse, larger "
+              "per-chip tiles, bf16 intermediates, fewer re-reads).",
+    "ici": "ICI-bound: reshard to cut all-gathers (wider FSDP shards, "
+           "sequence-parallel boundaries, overlap or batch collectives).",
+    "dcn": "DCN-bound: keep cross-pod traffic to one gradient reduce per "
+           "step; compress grads or accumulate more microbatches.",
+}
+
+
+def load_dir(path: str) -> list[dict]:
+    out = []
+    for name in sorted(os.listdir(path)):
+        if name.endswith(".json"):
+            with open(os.path.join(path, name)) as f:
+                out.append(json.load(f))
+    return out
+
+
+def table(records: list[dict], mesh: str = "pod1") -> str:
+    rows = ["| arch | shape | step | compute s | memory s | mem(kern) s "
+            "| ici s | dcn s | bottleneck | roofline | roofline(kern) | MFU "
+            "| useful | mem GiB |",
+            "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    for rec in records:
+        if rec.get("mesh") != mesh:
+            continue
+        if rec.get("skipped"):
+            rows.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | — "
+                        f"| — | — | SKIP | — | — | — | — | — |")
+            continue
+        r = from_record(rec)
+        if r is None:
+            rows.append(f"| {rec['arch']} | {rec['shape']} | FAIL "
+                        f"| — | — | — | — | — | — | — | — | — | — |")
+            continue
+        rows.append(
+            f"| {r.arch} | {r.shape} | {r.step.replace('_step','')} "
+            f"| {r.compute_s:.4f} | {r.memory_s:.4f} "
+            f"| {r.memory_kernel_s:.4f} | {r.ici_s:.4f} "
+            f"| {r.dcn_s:.4f} | {r.dominant} | {r.roofline_frac:.2f} "
+            f"| {r.kernel_roofline_frac:.2f} "
+            f"| {r.mfu:.2f} | {r.useful_ratio:.2f} | {r.mem_gib:.1f} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="pod1")
+    args = ap.parse_args()
+    recs = load_dir(args.dir)
+    print(table(recs, args.mesh))
+    print()
+    for rec in recs:
+        r = from_record(rec)
+        if r and rec.get("mesh") == args.mesh:
+            print(f"{r.arch:22s} {r.shape:12s} -> {r.dominant}: "
+                  f"{ADVICE[r.dominant]}")
+
+
+if __name__ == "__main__":
+    main()

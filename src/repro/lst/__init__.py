@@ -1,0 +1,24 @@
+"""Log-Structured Table (LST) substrate.
+
+Implements the storage layer the paper's translator operates over:
+
+* ``fs``        — pluggable filesystem with object-store semantics (put-if-absent
+                  atomic creates are the commit primitive, as on ABFS/S3/GCS).
+* ``chunkfile`` — the immutable columnar data-file format (plays the role Parquet
+                  plays in the paper: column chunks + footer statistics).
+* ``delta``     — Delta-Lake-style JSON action log (``_delta_log/NNNN.json``).
+* ``iceberg``   — Iceberg-style snapshot / manifest-list / manifest chain.
+* ``hudi``      — Hudi-style timeline of instants (``.hoodie/<ts>.commit``).
+* ``table``     — the "engine" role: scan with stats-based file pruning, append,
+                  copy-on-write delete, time travel, over any of the formats.
+"""
+
+from repro.lst.fs import LocalFS, FileSystem
+from repro.lst.chunkfile import write_chunk, read_chunk, read_chunk_stats, DataFileMeta
+from repro.lst import delta, iceberg, hudi
+from repro.lst.table import LakeTable, FORMATS
+
+__all__ = [
+    "LocalFS", "FileSystem", "write_chunk", "read_chunk", "read_chunk_stats",
+    "DataFileMeta", "delta", "iceberg", "hudi", "LakeTable", "FORMATS",
+]

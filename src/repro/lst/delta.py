@@ -1,0 +1,299 @@
+"""Delta-Lake-style LST: an ordered JSON action log under ``_delta_log/``.
+
+Faithful architectural reimplementation of the Delta transaction-log protocol:
+
+* ``_delta_log/{version:020d}.json`` — newline-delimited JSON *actions*
+  (``protocol``, ``metaData``, ``add``, ``remove``, ``commitInfo``).
+* Version = the integer in the file name; commit = put-if-absent of the next
+  version file (optimistic concurrency, exactly Delta's protocol on object
+  stores with conditional writes).
+* Checkpoints: every ``delta.checkpointInterval`` commits an aggregated
+  ``{version:020d}.checkpoint.json`` plus a ``_last_checkpoint`` pointer, so
+  state reconstruction replays O(interval) log files, not O(history).
+* Per-file statistics ride in ``add.stats`` as a JSON string
+  (``numRecords/minValues/maxValues/nullCount``) — Delta's layout.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+from repro.lst.chunkfile import ColumnStats, DataFileMeta
+from repro.lst.fs import PutIfAbsentError, join
+from repro.lst.schema import Field, PartitionSpec, Schema, TableState
+
+FORMAT = "delta"
+LOG_DIR = "_delta_log"
+CHECKPOINT_INTERVAL_KEY = "delta.checkpointInterval"
+DEFAULT_CHECKPOINT_INTERVAL = 10
+
+_TYPES_TO_DELTA = {"int32": "integer", "int64": "long", "float32": "float",
+                   "float64": "double", "string": "string", "bool": "boolean",
+                   "binary": "binary", "timestamp": "timestamp"}
+_DELTA_TO_TYPES = {v: k for k, v in _TYPES_TO_DELTA.items()}
+
+
+def schema_to_delta(schema: Schema) -> str:
+    return json.dumps({"type": "struct", "fields": [
+        {"name": f.name, "type": _TYPES_TO_DELTA[f.type], "nullable": f.nullable,
+         "metadata": ({"delta.columnMapping.id": f.field_id}
+                      if f.field_id is not None else {})}
+        for f in schema.fields]})
+
+
+def schema_from_delta(s: str, schema_id: int = 0) -> Schema:
+    d = json.loads(s)
+    return Schema([Field(f["name"], _DELTA_TO_TYPES[f["type"]], f["nullable"],
+                         f.get("metadata", {}).get("delta.columnMapping.id"))
+                   for f in d["fields"]], schema_id)
+
+
+def _stats_to_delta(column_stats: dict) -> str:
+    num = max((s.count for s in column_stats.values()), default=0)
+    return json.dumps({
+        "numRecords": num,
+        "minValues": {k: s.min for k, s in column_stats.items() if s.min is not None},
+        "maxValues": {k: s.max for k, s in column_stats.items() if s.max is not None},
+        "nullCount": {k: s.nan_count for k, s in column_stats.items()},
+    })
+
+
+def _stats_from_delta(s: str | None) -> dict:
+    if not s:
+        return {}
+    d = json.loads(s)
+    cols = set(d.get("minValues", {})) | set(d.get("maxValues", {})) | \
+        set(d.get("nullCount", {}))
+    return {c: ColumnStats(d.get("minValues", {}).get(c),
+                           d.get("maxValues", {}).get(c),
+                           d.get("numRecords", 0),
+                           d.get("nullCount", {}).get(c, 0)) for c in cols}
+
+
+def _add_action(f: DataFileMeta, ts: int) -> dict:
+    return {"add": {"path": f.path, "partitionValues": {k: str(v) for k, v in
+                                                        f.partition_values.items()},
+                    "size": f.size_bytes, "modificationTime": ts, "dataChange": True,
+                    "stats": _stats_to_delta(f.column_stats),
+                    "tags": f.extra or {}}}
+
+
+def _file_from_add(a: dict) -> DataFileMeta:
+    st = _stats_from_delta(a.get("stats"))
+    num = json.loads(a["stats"])["numRecords"] if a.get("stats") else 0
+    return DataFileMeta(path=a["path"], size_bytes=a["size"], record_count=num,
+                        partition_values=dict(a.get("partitionValues", {})),
+                        column_stats=st, extra=dict(a.get("tags", {})))
+
+
+class DeltaTable:
+    format = FORMAT
+
+    def __init__(self, fs, base_path: str):
+        self.fs = fs
+        self.base = base_path
+
+    # ------------------------------------------------------------- lifecycle
+    @classmethod
+    def exists(cls, fs, base_path: str) -> bool:
+        return bool(fs.list_dir(join(base_path, LOG_DIR)))
+
+    @classmethod
+    def create(cls, fs, base_path: str, schema: Schema,
+               partition_spec: PartitionSpec = PartitionSpec(),
+               properties: dict | None = None) -> "DeltaTable":
+        t = cls(fs, base_path)
+        ts = _now_ms()
+        actions = [
+            {"protocol": {"minReaderVersion": 1, "minWriterVersion": 2}},
+            _metadata_action(schema, partition_spec, properties or {}, ts),
+            {"commitInfo": {"timestamp": ts, "operation": "CREATE TABLE",
+                            "operationParameters": {}}},
+        ]
+        t._write_commit(0, actions)
+        return t
+
+    @classmethod
+    def open(cls, fs, base_path: str) -> "DeltaTable":
+        if not cls.exists(fs, base_path):
+            raise FileNotFoundError(f"no delta table at {base_path}")
+        return cls(fs, base_path)
+
+    # ------------------------------------------------------------------ log
+    def _log_path(self, version: int, checkpoint: bool = False) -> str:
+        suffix = ".checkpoint.json" if checkpoint else ".json"
+        return join(self.base, LOG_DIR, f"{version:020d}{suffix}")
+
+    def _list_versions(self) -> list[int]:
+        names = self.fs.list_dir(join(self.base, LOG_DIR))
+        return sorted(int(n[:20]) for n in names
+                      if n.endswith(".json") and not n.endswith(".checkpoint.json")
+                      and n[:20].isdigit())
+
+    def _read_actions(self, version: int) -> list[dict]:
+        raw = self.fs.read_bytes(self._log_path(version)).decode()
+        return [json.loads(line) for line in raw.splitlines() if line.strip()]
+
+    def _last_checkpoint(self) -> int | None:
+        p = join(self.base, LOG_DIR, "_last_checkpoint")
+        if not self.fs.exists(p):
+            return None
+        return json.loads(self.fs.read_bytes(p))["version"]
+
+    def _write_commit(self, version: int, actions: list[dict]) -> None:
+        payload = "\n".join(json.dumps(a) for a in actions).encode()
+        try:
+            self.fs.write_bytes(self._log_path(version), payload)
+        except PutIfAbsentError as e:
+            raise CommitConflict(f"delta version {version} already committed") from e
+
+    # ----------------------------------------------------------------- state
+    def current_version(self) -> str:
+        vs = self._list_versions()
+        if not vs:
+            raise FileNotFoundError("empty delta log")
+        return str(vs[-1])
+
+    def versions(self) -> list[str]:
+        return [str(v) for v in self._list_versions()]
+
+    def snapshot(self, version: str | None = None) -> TableState:
+        target = int(version) if version is not None else int(self.current_version())
+        files: dict[str, DataFileMeta] = {}
+        schema, pspec, props, ts = None, PartitionSpec(), {}, 0
+        start = 0
+        cp = self._last_checkpoint()
+        if cp is not None and cp <= target:
+            for a in self._read_checkpoint(cp):
+                schema, pspec, props, files, ts = _apply(a, schema, pspec, props,
+                                                         files, ts)
+            start = cp + 1
+        for v in range(start, target + 1):
+            if not self.fs.exists(self._log_path(v)):
+                continue
+            for a in self._read_actions(v):
+                schema, pspec, props, files, ts = _apply(a, schema, pspec, props,
+                                                         files, ts)
+        if schema is None:
+            raise ValueError(f"no metaData action found up to version {target}")
+        return TableState(FORMAT, str(target), ts, schema, pspec, files, props)
+
+    def changes(self, version: str) -> tuple[list[DataFileMeta], list[str], str, dict]:
+        """(adds, removed paths, operation, commit-info) for one commit."""
+        adds, removes, op, info = [], [], "unknown", {}
+        for a in self._read_actions(int(version)):
+            if "add" in a:
+                adds.append(_file_from_add(a["add"]))
+            elif "remove" in a:
+                removes.append(a["remove"]["path"])
+            elif "commitInfo" in a:
+                op = a["commitInfo"].get("operation", "unknown")
+                info = a["commitInfo"]
+        return adds, removes, op, info
+
+    def properties(self) -> dict:
+        return self.snapshot().properties
+
+    # --------------------------------------------------------------- commits
+    def commit(self, adds: list[DataFileMeta] = (), removes: list[str] = (), *,
+               schema: Schema | None = None, properties: dict | None = None,
+               operation: str = "WRITE", extra_meta: dict | None = None,
+               max_retries: int = 5) -> str:
+        for _ in range(max_retries):
+            try:
+                return self._commit_once(adds, removes, schema, properties,
+                                         operation, extra_meta)
+            except CommitConflict:
+                continue
+        raise CommitConflict("delta commit retries exhausted")
+
+    def _commit_once(self, adds, removes, schema, properties, operation,
+                     extra_meta) -> str:
+        cur = self.snapshot()
+        version = int(cur.version) + 1
+        ts = _now_ms()
+        actions: list[dict] = []
+        if schema is not None or properties:
+            new_schema = schema or cur.schema
+            props = dict(cur.properties)
+            props.update(properties or {})
+            actions.append(_metadata_action(new_schema, cur.partition_spec, props, ts))
+        for p in removes:
+            actions.append({"remove": {"path": p, "deletionTimestamp": ts,
+                                       "dataChange": True}})
+        for f in adds:
+            actions.append(_add_action(f, ts))
+        ci = {"timestamp": ts, "operation": operation, "operationParameters": {}}
+        if extra_meta:
+            ci["xtable"] = extra_meta
+        actions.append({"commitInfo": ci})
+        self._write_commit(version, actions)
+        self._maybe_checkpoint(version)
+        return str(version)
+
+    # ------------------------------------------------------------ checkpoint
+    def _checkpoint_interval(self) -> int:
+        try:
+            return int(self.snapshot().properties.get(
+                CHECKPOINT_INTERVAL_KEY, DEFAULT_CHECKPOINT_INTERVAL))
+        except Exception:
+            return DEFAULT_CHECKPOINT_INTERVAL
+
+    def _maybe_checkpoint(self, version: int) -> None:
+        if version == 0 or version % self._checkpoint_interval():
+            return
+        st = self.snapshot(str(version))
+        actions = [{"protocol": {"minReaderVersion": 1, "minWriterVersion": 2}},
+                   _metadata_action(st.schema, st.partition_spec, st.properties,
+                                    st.timestamp_ms)]
+        actions += [_add_action(f, st.timestamp_ms) for f in st.files.values()]
+        try:
+            self.fs.write_bytes(self._log_path(version, checkpoint=True),
+                                "\n".join(json.dumps(a) for a in actions).encode())
+        except PutIfAbsentError:
+            return  # concurrent checkpointer won; fine
+        self.fs.write_bytes(join(self.base, LOG_DIR, "_last_checkpoint"),
+                            json.dumps({"version": version}).encode(),
+                            overwrite=True)
+
+    def _read_checkpoint(self, version: int) -> list[dict]:
+        raw = self.fs.read_bytes(self._log_path(version, checkpoint=True)).decode()
+        return [json.loads(line) for line in raw.splitlines() if line.strip()]
+
+
+class CommitConflict(RuntimeError):
+    pass
+
+
+def _metadata_action(schema: Schema, pspec: PartitionSpec, props: dict,
+                     ts: int) -> dict:
+    return {"metaData": {
+        "id": props.get("delta.tableId", "tbl"),
+        "format": {"provider": "chunkfile", "options": {}},
+        "schemaString": schema_to_delta(schema),
+        "partitionColumns": pspec.column_names(),
+        "configuration": {k: str(v) for k, v in props.items()},
+        "createdTime": ts}}
+
+
+def _apply(action: dict, schema, pspec, props, files, ts):
+    if "metaData" in action:
+        m = action["metaData"]
+        schema = schema_from_delta(m["schemaString"])
+        pspec = PartitionSpec(m.get("partitionColumns", []))
+        props = dict(m.get("configuration", {}))
+    elif "add" in action:
+        f = _file_from_add(action["add"])
+        files[f.path] = f
+        ts = max(ts, action["add"].get("modificationTime", 0))
+    elif "remove" in action:
+        files.pop(action["remove"]["path"], None)
+        ts = max(ts, action["remove"].get("deletionTimestamp", 0))
+    elif "commitInfo" in action:
+        ts = max(ts, action["commitInfo"].get("timestamp", 0))
+    return schema, pspec, props, files, ts
+
+
+def _now_ms() -> int:
+    return time.time_ns() // 1_000_000

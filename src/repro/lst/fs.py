@@ -1,0 +1,100 @@
+"""Pluggable filesystem with object-store semantics.
+
+The paper's XTable connects to data lakes through a pluggable file system
+(ABFS in Listing 2).  The property every LST commit protocol relies on is an
+*atomic put-if-absent*: two writers racing to create the same object must see
+exactly one winner.  ``LocalFS`` provides that via ``O_CREAT|O_EXCL``; any
+object store with conditional puts (ABFS ETag, S3 If-None-Match, GCS
+generation preconditions) can implement the same five methods.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from typing import Iterable, Protocol, runtime_checkable
+
+
+class PutIfAbsentError(FileExistsError):
+    """Raised when an exclusive create loses the race (commit conflict)."""
+
+
+@runtime_checkable
+class FileSystem(Protocol):
+    def read_bytes(self, path: str) -> bytes: ...
+    def write_bytes(self, path: str, data: bytes, *, overwrite: bool = False) -> None: ...
+    def exists(self, path: str) -> bool: ...
+    def list_dir(self, path: str) -> list[str]: ...
+    def delete(self, path: str) -> None: ...
+
+
+def join(*parts: str) -> str:
+    """Join path segments with '/' (object-store style, no os.sep surprises)."""
+    cleaned = [p.strip("/") if i else p.rstrip("/") for i, p in enumerate(parts) if p]
+    return "/".join(cleaned)
+
+
+class LocalFS:
+    """POSIX-backed FileSystem with object-store commit semantics.
+
+    Writes are *atomic at the object level*: data is staged to a temp file and
+    linked into place, so readers never observe partial objects — mirroring
+    object-store single-shot PUTs (this is what makes LST metadata commits
+    atomic, per §2 of the paper).
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+
+    # -- reads ------------------------------------------------------------
+    def read_bytes(self, path: str) -> bytes:
+        with open(path, "rb") as f:
+            return f.read()
+
+    def exists(self, path: str) -> bool:
+        return os.path.exists(path)
+
+    def list_dir(self, path: str) -> list[str]:
+        try:
+            return sorted(os.listdir(path))
+        except FileNotFoundError:
+            return []
+
+    def size(self, path: str) -> int:
+        return os.stat(path).st_size
+
+    # -- writes -----------------------------------------------------------
+    def write_bytes(self, path: str, data: bytes, *, overwrite: bool = False) -> None:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = f"{path}.tmp.{os.getpid()}.{threading.get_ident()}"
+        with open(tmp, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        if overwrite:
+            os.replace(tmp, path)  # atomic swap
+            return
+        # put-if-absent: hardlink fails with EEXIST if somebody else won.
+        try:
+            os.link(tmp, path)
+        except FileExistsError:
+            raise PutIfAbsentError(path)
+        finally:
+            os.unlink(tmp)
+
+    def delete(self, path: str) -> None:
+        try:
+            os.unlink(path)
+        except FileNotFoundError:
+            pass
+
+
+def strip_scheme(path: str) -> str:
+    """Accept abfs://c@a.dfs.core.windows.net/p, file:///p, or plain paths."""
+    if "://" in path:
+        rest = path.split("://", 1)[1]
+        # drop the authority component for URI-style paths
+        if "/" in rest:
+            rest = rest.split("/", 1)[1]
+        return "/" + rest.lstrip("/")
+    return path

@@ -1,0 +1,272 @@
+"""Hudi-style LST: a timeline of instants under ``.hoodie/``.
+
+Faithful architectural reimplementation of the Hudi (copy-on-write) timeline:
+
+* ``.hoodie/hoodie.properties`` — table name/type/version, create schema
+  (Avro record JSON), partition fields.
+* Timeline instants ``.hoodie/{ts}.{action}`` with the three-phase state
+  machine ``{ts}.{action}.requested`` -> ``{ts}.{action}.inflight`` ->
+  ``{ts}.{action}`` (completed). Only the *completed* file makes the commit
+  visible — put-if-absent of the completed instant is the atomic commit point.
+* Actions: ``commit`` (insert/upsert) and ``replacecommit`` (COW delete /
+  clustering), with ``partitionToWriteStats`` (per-file write statistics) and
+  ``partitionToReplacedFilePaths`` payloads, schema + arbitrary key/values in
+  ``extraMetadata`` (where XTable's real Hudi target stores its sync state).
+* Data files are named ``{fileId}_{instant}.chunk`` inside partition dirs —
+  Hudi's file-group/file-slice naming.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+
+from repro.lst.chunkfile import ColumnStats, DataFileMeta
+from repro.lst.fs import PutIfAbsentError, join
+from repro.lst.schema import Field, PartitionSpec, Schema, TableState
+
+FORMAT = "hudi"
+HOODIE_DIR = ".hoodie"
+
+_TYPES_TO_AVRO = {"int32": "int", "int64": "long", "float32": "float",
+                  "float64": "double", "string": "string", "bool": "boolean",
+                  "binary": "bytes",
+                  "timestamp": {"type": "long", "logicalType": "timestamp-micros"}}
+
+
+def schema_to_avro(schema: Schema, name: str = "record") -> str:
+    fields = []
+    for f in schema.fields:
+        t = _TYPES_TO_AVRO[f.type]
+        fields.append({"name": f.name, "type": ["null", t] if f.nullable else t})
+    return json.dumps({"type": "record", "name": name, "fields": fields})
+
+
+def schema_from_avro(s: str) -> Schema:
+    d = json.loads(s)
+    rev = {}
+    for k, v in _TYPES_TO_AVRO.items():
+        rev[json.dumps(v, sort_keys=True)] = k
+    out = []
+    for f in d["fields"]:
+        t = f["type"]
+        nullable = isinstance(t, list) and "null" in t
+        if nullable:
+            t = [x for x in t if x != "null"][0]
+        out.append(Field(f["name"], rev[json.dumps(t, sort_keys=True)], nullable))
+    return Schema(out)
+
+
+_instant_lock = threading.Lock()
+_last_instant = [0]
+
+
+def new_instant() -> str:
+    """Monotonic Hudi-style instant timestamp (yyyyMMddHHmmssSSS-like)."""
+    with _instant_lock:
+        t = time.time_ns() // 1_000_000
+        if t <= _last_instant[0]:
+            t = _last_instant[0] + 1
+        _last_instant[0] = t
+        return time.strftime("%Y%m%d%H%M%S", time.gmtime(t / 1000)) + f"{t % 1000:03d}"
+
+
+def _stat_entry(f: DataFileMeta) -> dict:
+    return {"path": f.path, "fileId": f.extra.get("fileId", f.path.split("/")[-1]
+                                                  .split("_")[0]),
+            "numWrites": f.record_count, "fileSizeInBytes": f.size_bytes,
+            "partitionPath": "/".join(f"{k}={v}" for k, v in
+                                      f.partition_values.items()),
+            "partitionValues": {k: v for k, v in f.partition_values.items()},
+            "minValues": {k: s.min for k, s in f.column_stats.items()},
+            "maxValues": {k: s.max for k, s in f.column_stats.items()},
+            "nullCounts": {k: s.nan_count for k, s in f.column_stats.items()},
+            "valueCounts": {k: s.count for k, s in f.column_stats.items()},
+            "tags": f.extra or {}}
+
+
+def _file_from_stat(w: dict) -> DataFileMeta:
+    cols = set(w.get("minValues", {})) | set(w.get("maxValues", {})) | \
+        set(w.get("nullCounts", {}))
+    stats = {c: ColumnStats(w.get("minValues", {}).get(c),
+                            w.get("maxValues", {}).get(c),
+                            w.get("valueCounts", {}).get(c, 0),
+                            w.get("nullCounts", {}).get(c, 0)) for c in cols}
+    return DataFileMeta(path=w["path"], size_bytes=w["fileSizeInBytes"],
+                        record_count=w["numWrites"],
+                        partition_values=dict(w.get("partitionValues", {})),
+                        column_stats=stats, extra=dict(w.get("tags", {})))
+
+
+class CommitConflict(RuntimeError):
+    pass
+
+
+class HudiTable:
+    format = FORMAT
+
+    def __init__(self, fs, base_path: str):
+        self.fs = fs
+        self.base = base_path
+
+    # ------------------------------------------------------------- lifecycle
+    @classmethod
+    def exists(cls, fs, base_path: str) -> bool:
+        return fs.exists(join(base_path, HOODIE_DIR, "hoodie.properties"))
+
+    @classmethod
+    def create(cls, fs, base_path: str, schema: Schema,
+               partition_spec: PartitionSpec = PartitionSpec(),
+               properties: dict | None = None) -> "HudiTable":
+        t = cls(fs, base_path)
+        props = {"hoodie.table.name": (properties or {}).get("name", "table"),
+                 "hoodie.table.type": "COPY_ON_WRITE",
+                 "hoodie.table.version": "6",
+                 "hoodie.table.create.schema": schema_to_avro(schema),
+                 "hoodie.table.partition.fields":
+                     ",".join(partition_spec.column_names())}
+        props.update({k: str(v) for k, v in (properties or {}).items()})
+        t._write_props(props, overwrite=False)
+        return t
+
+    @classmethod
+    def open(cls, fs, base_path: str) -> "HudiTable":
+        if not cls.exists(fs, base_path):
+            raise FileNotFoundError(f"no hudi table at {base_path}")
+        return cls(fs, base_path)
+
+    # -------------------------------------------------------------- timeline
+    def _props_path(self) -> str:
+        return join(self.base, HOODIE_DIR, "hoodie.properties")
+
+    def _write_props(self, props: dict, overwrite: bool = True) -> None:
+        body = "\n".join(f"{k}={v}" for k, v in sorted(props.items())).encode()
+        self.fs.write_bytes(self._props_path(), body, overwrite=overwrite)
+
+    def _read_props(self) -> dict:
+        out = {}
+        for line in self.fs.read_bytes(self._props_path()).decode().splitlines():
+            if "=" in line:
+                k, v = line.split("=", 1)
+                out[k] = v
+        return out
+
+    def _timeline(self) -> list[tuple[str, str]]:
+        """Completed instants: [(ts, action)] in timeline order."""
+        out = []
+        for n in self.fs.list_dir(join(self.base, HOODIE_DIR)):
+            parts = n.split(".")
+            if len(parts) == 2 and parts[0].isdigit() and \
+                    parts[1] in ("commit", "replacecommit"):
+                out.append((parts[0], parts[1]))
+        return sorted(out)
+
+    def _instant_payload(self, ts: str, action: str) -> dict:
+        return json.loads(self.fs.read_bytes(
+            join(self.base, HOODIE_DIR, f"{ts}.{action}")))
+
+    # ----------------------------------------------------------------- state
+    def current_version(self) -> str:
+        tl = self._timeline()
+        return tl[-1][0] if tl else "0"
+
+    def versions(self) -> list[str]:
+        return [ts for ts, _ in self._timeline()]
+
+    def snapshot(self, version: str | None = None) -> TableState:
+        props = self._read_props()
+        target = version if version is not None else self.current_version()
+        files: dict[str, DataFileMeta] = {}
+        schema = schema_from_avro(props["hoodie.table.create.schema"])
+        ts_ms = 0
+        for ts, action in self._timeline():
+            if ts > target:
+                break
+            payload = self._instant_payload(ts, action)
+            for paths in payload.get("partitionToReplacedFilePaths", {}).values():
+                for p in paths:
+                    files.pop(p, None)
+            for stats in payload.get("partitionToWriteStats", {}).values():
+                for w in stats:
+                    f = _file_from_stat(w)
+                    files[f.path] = f
+            if "schema" in payload.get("extraMetadata", {}):
+                schema = schema_from_avro(payload["extraMetadata"]["schema"])
+            ts_ms = max(ts_ms, payload.get("timestampMs", 0))
+        pf = props.get("hoodie.table.partition.fields", "")
+        spec = PartitionSpec([c for c in pf.split(",") if c])
+        user_props = {k: v for k, v in props.items()
+                      if not k.startswith("hoodie.")}
+        return TableState(FORMAT, target, ts_ms, schema, spec, files, user_props)
+
+    def changes(self, version: str) -> tuple[list[DataFileMeta], list[str], str, dict]:
+        for ts, action in self._timeline():
+            if ts == version:
+                payload = self._instant_payload(ts, action)
+                adds = [_file_from_stat(w) for stats in
+                        payload.get("partitionToWriteStats", {}).values()
+                        for w in stats]
+                removes = [p for paths in
+                           payload.get("partitionToReplacedFilePaths", {}).values()
+                           for p in paths]
+                return adds, removes, payload.get("operationType", "unknown"), \
+                    dict(payload.get("extraMetadata", {}))
+        raise KeyError(f"instant {version} not found")
+
+    def properties(self) -> dict:
+        props = self._read_props()
+        return {k: v for k, v in props.items() if not k.startswith("hoodie.")}
+
+    def latest_extra_metadata(self) -> dict:
+        tl = self._timeline()
+        if not tl:
+            return {}
+        return dict(self._instant_payload(*tl[-1]).get("extraMetadata", {}))
+
+    # --------------------------------------------------------------- commits
+    def commit(self, adds: list[DataFileMeta] = (), removes: list[str] = (), *,
+               schema: Schema | None = None, properties: dict | None = None,
+               operation: str = "upsert", extra_meta: dict | None = None,
+               max_retries: int = 5) -> str:
+        action = "replacecommit" if removes else "commit"
+        for _ in range(max_retries):
+            instant = new_instant()
+            hdir = join(self.base, HOODIE_DIR)
+            try:
+                # three-phase instant state machine
+                self.fs.write_bytes(join(hdir, f"{instant}.{action}.requested"), b"{}")
+            except PutIfAbsentError:
+                continue
+            self.fs.write_bytes(join(hdir, f"{instant}.{action}.inflight"), b"{}",
+                                overwrite=True)
+            p2ws: dict[str, list] = {}
+            for f in adds:
+                part = "/".join(f"{k}={v}" for k, v in f.partition_values.items())
+                p2ws.setdefault(part, []).append(_stat_entry(f))
+            p2rf: dict[str, list] = {}
+            for p in removes:
+                p2rf.setdefault(p.rsplit("/", 1)[0] if "/" in p else "", []) \
+                    .append(p)
+            cur_schema = schema if schema is not None else self.snapshot().schema
+            extra = {"schema": schema_to_avro(cur_schema)}
+            if extra_meta:
+                extra.update({k: v if isinstance(v, str) else json.dumps(v)
+                              for k, v in extra_meta.items()})
+            payload = {"partitionToWriteStats": p2ws,
+                       "operationType": operation.upper(),
+                       "timestampMs": time.time_ns() // 1_000_000,
+                       "extraMetadata": extra}
+            if removes:
+                payload["partitionToReplacedFilePaths"] = p2rf
+            try:
+                self.fs.write_bytes(join(hdir, f"{instant}.{action}"),
+                                    json.dumps(payload).encode())
+            except PutIfAbsentError:
+                continue
+            if properties:
+                props = self._read_props()
+                props.update({k: str(v) for k, v in properties.items()})
+                self._write_props(props)
+            return instant
+        raise CommitConflict("hudi commit retries exhausted")

@@ -1,0 +1,347 @@
+"""Iceberg-style LST: snapshot -> manifest-list -> manifest metadata chain.
+
+Faithful architectural reimplementation of the Iceberg table spec (v2):
+
+* ``metadata/v{N}.metadata.json`` — table metadata: schemas (with *field ids*),
+  partition specs (with transforms), properties, the snapshot list, and
+  ``current-snapshot-id``; plus ``metadata/version-hint.text`` (Hadoop-catalog
+  style pointer). Commit = put-if-absent of the next metadata file.
+* ``metadata/snap-{id}.manifest-list.json`` — one manifest-list per snapshot.
+* ``metadata/manifest-{id}-{k}.json`` — manifest files holding data-file
+  entries with status ADDED(1)/EXISTING(0)/DELETED(2) and column bounds.
+* Manifest *reuse*: a new snapshot's manifest list references untouched
+  manifests from the parent snapshot as-is — only new/affected manifests are
+  written. This is the property that makes Iceberg commits (and XTable's
+  incremental translation into Iceberg) O(change), not O(table).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+import uuid
+
+from repro.lst.chunkfile import ColumnStats, DataFileMeta
+from repro.lst.fs import PutIfAbsentError, join
+from repro.lst.schema import (Field, PartitionField, PartitionSpec, Schema,
+                              TableState)
+
+FORMAT = "iceberg"
+META_DIR = "metadata"
+ADDED, EXISTING, DELETED = 1, 0, 2
+
+_TYPES_TO_ICE = {"int32": "int", "int64": "long", "float32": "float",
+                 "float64": "double", "string": "string", "bool": "boolean",
+                 "binary": "binary", "timestamp": "timestamptz"}
+_ICE_TO_TYPES = {v: k for k, v in _TYPES_TO_ICE.items()}
+
+
+def schema_to_ice(schema: Schema) -> dict:
+    schema = schema.with_ids()
+    return {"type": "struct", "schema-id": schema.schema_id,
+            "fields": [{"id": f.field_id, "name": f.name,
+                        "required": not f.nullable,
+                        "type": _TYPES_TO_ICE[f.type]} for f in schema.fields]}
+
+
+def schema_from_ice(d: dict) -> Schema:
+    return Schema([Field(f["name"], _ICE_TO_TYPES[f["type"]],
+                         not f["required"], f["id"]) for f in d["fields"]],
+                  d.get("schema-id", 0))
+
+
+def spec_to_ice(spec: PartitionSpec, schema: Schema) -> dict:
+    schema = schema.with_ids()
+    ids = {f.name: f.field_id for f in schema.fields}
+    return {"spec-id": 0, "fields": [
+        {"source-id": ids[f.source], "field-id": 1000 + i,
+         "transform": f.transform, "name": f.out_name}
+        for i, f in enumerate(spec.fields)]}
+
+
+def spec_from_ice(d: dict, schema: Schema) -> PartitionSpec:
+    names = {f.field_id: f.name for f in schema.fields}
+    return PartitionSpec([PartitionField(names[f["source-id"]], f["transform"],
+                                         f["name"]) for f in d["fields"]])
+
+
+def _file_to_entry(f: DataFileMeta, status: int, snapshot_id: int) -> dict:
+    return {"status": status, "snapshot-id": snapshot_id, "data-file": {
+        "file-path": f.path, "file-format": "CHUNKFILE",
+        "partition": {k: v for k, v in f.partition_values.items()},
+        "record-count": f.record_count, "file-size-in-bytes": f.size_bytes,
+        "lower-bounds": {k: s.min for k, s in f.column_stats.items()},
+        "upper-bounds": {k: s.max for k, s in f.column_stats.items()},
+        "null-value-counts": {k: s.nan_count for k, s in f.column_stats.items()},
+        "value-counts": {k: s.count for k, s in f.column_stats.items()},
+        "extra": f.extra or {}}}
+
+
+def _file_from_entry(e: dict) -> DataFileMeta:
+    df = e["data-file"]
+    cols = set(df.get("lower-bounds", {})) | set(df.get("upper-bounds", {})) | \
+        set(df.get("null-value-counts", {}))
+    stats = {c: ColumnStats(df.get("lower-bounds", {}).get(c),
+                            df.get("upper-bounds", {}).get(c),
+                            df.get("value-counts", {}).get(c, 0),
+                            df.get("null-value-counts", {}).get(c, 0))
+             for c in cols}
+    return DataFileMeta(path=df["file-path"], size_bytes=df["file-size-in-bytes"],
+                        record_count=df["record-count"],
+                        partition_values=dict(df.get("partition", {})),
+                        column_stats=stats, extra=dict(df.get("extra", {})))
+
+
+class CommitConflict(RuntimeError):
+    pass
+
+
+class IcebergTable:
+    format = FORMAT
+
+    def __init__(self, fs, base_path: str):
+        self.fs = fs
+        self.base = base_path
+
+    # ------------------------------------------------------------- lifecycle
+    @classmethod
+    def exists(cls, fs, base_path: str) -> bool:
+        return any(n.endswith(".metadata.json")
+                   for n in fs.list_dir(join(base_path, META_DIR)))
+
+    @classmethod
+    def create(cls, fs, base_path: str, schema: Schema,
+               partition_spec: PartitionSpec = PartitionSpec(),
+               properties: dict | None = None) -> "IcebergTable":
+        t = cls(fs, base_path)
+        schema = schema.with_ids()
+        meta = {
+            "format-version": 2, "table-uuid": str(uuid.uuid4()),
+            "location": base_path, "last-sequence-number": 0,
+            "last-updated-ms": _now_ms(),
+            "last-column-id": max((f.field_id or 0) for f in schema.fields),
+            "schemas": [schema_to_ice(schema)], "current-schema-id": schema.schema_id,
+            "partition-specs": [spec_to_ice(partition_spec, schema)],
+            "default-spec-id": 0,
+            "properties": {k: str(v) for k, v in (properties or {}).items()},
+            "current-snapshot-id": -1, "snapshots": [], "snapshot-log": [],
+        }
+        t._write_metadata(1, meta)
+        return t
+
+    @classmethod
+    def open(cls, fs, base_path: str) -> "IcebergTable":
+        if not cls.exists(fs, base_path):
+            raise FileNotFoundError(f"no iceberg table at {base_path}")
+        return cls(fs, base_path)
+
+    # ------------------------------------------------------------- metadata
+    def _meta_path(self, n: int) -> str:
+        return join(self.base, META_DIR, f"v{n}.metadata.json")
+
+    def _hint_path(self) -> str:
+        return join(self.base, META_DIR, "version-hint.text")
+
+    def _current_meta_version(self) -> int:
+        if self.fs.exists(self._hint_path()):
+            n = int(self.fs.read_bytes(self._hint_path()).decode().strip())
+            # the hint may lag a concurrent commit; roll forward
+            while self.fs.exists(self._meta_path(n + 1)):
+                n += 1
+            return n
+        versions = [int(x[1:-len(".metadata.json")])
+                    for x in self.fs.list_dir(join(self.base, META_DIR))
+                    if x.startswith("v") and x.endswith(".metadata.json")]
+        if not versions:
+            raise FileNotFoundError("no iceberg metadata")
+        return max(versions)
+
+    def _read_metadata(self, n: int | None = None) -> tuple[int, dict]:
+        n = n if n is not None else self._current_meta_version()
+        return n, json.loads(self.fs.read_bytes(self._meta_path(n)))
+
+    def _write_metadata(self, n: int, meta: dict) -> None:
+        try:
+            self.fs.write_bytes(self._meta_path(n), json.dumps(meta).encode())
+        except PutIfAbsentError as e:
+            raise CommitConflict(f"iceberg metadata v{n} exists") from e
+        self.fs.write_bytes(self._hint_path(), str(n).encode(), overwrite=True)
+
+    # ------------------------------------------------------------ manifests
+    def _read_manifest(self, path: str) -> list[dict]:
+        return json.loads(self.fs.read_bytes(join(self.base, path)))["entries"]
+
+    def _write_manifest(self, name: str, entries: list[dict]) -> str:
+        rel = join(META_DIR, name)
+        self.fs.write_bytes(join(self.base, rel),
+                            json.dumps({"entries": entries}).encode())
+        return rel
+
+    def _read_manifest_list(self, path: str) -> list[dict]:
+        return json.loads(self.fs.read_bytes(join(self.base, path)))["manifests"]
+
+    # ----------------------------------------------------------------- state
+    def current_version(self) -> str:
+        _, meta = self._read_metadata()
+        return str(meta["current-snapshot-id"])
+
+    def versions(self) -> list[str]:
+        _, meta = self._read_metadata()
+        return [str(s["snapshot-id"]) for s in
+                sorted(meta["snapshots"], key=lambda s: s["sequence-number"])]
+
+    def _snapshot_rec(self, meta: dict, snapshot_id: int) -> dict:
+        for s in meta["snapshots"]:
+            if s["snapshot-id"] == snapshot_id:
+                return s
+        raise KeyError(f"snapshot {snapshot_id} not found")
+
+    def _live_files(self, meta: dict, snap: dict) -> dict:
+        files: dict[str, DataFileMeta] = {}
+        for m in self._read_manifest_list(snap["manifest-list"]):
+            for e in self._read_manifest(m["manifest-path"]):
+                if e["status"] != DELETED:
+                    f = _file_from_entry(e)
+                    files[f.path] = f
+        return files
+
+    def snapshot(self, version: str | None = None) -> TableState:
+        _, meta = self._read_metadata()
+        sid = int(version) if version is not None else meta["current-snapshot-id"]
+        schema = self._schema_of(meta, meta["current-schema-id"])
+        spec = spec_from_ice(meta["partition-specs"][meta["default-spec-id"]], schema)
+        if sid == -1:  # empty table
+            return TableState(FORMAT, "-1", meta["last-updated-ms"], schema, spec,
+                              {}, dict(meta["properties"]))
+        snap = self._snapshot_rec(meta, sid)
+        schema = self._schema_of(meta, snap.get("schema-id",
+                                                meta["current-schema-id"]))
+        return TableState(FORMAT, str(sid), snap["timestamp-ms"], schema, spec,
+                          self._live_files(meta, snap), dict(meta["properties"]))
+
+    def _schema_of(self, meta: dict, schema_id: int) -> Schema:
+        for s in meta["schemas"]:
+            if s.get("schema-id", 0) == schema_id:
+                return schema_from_ice(s)
+        return schema_from_ice(meta["schemas"][-1])
+
+    def changes(self, version: str) -> tuple[list[DataFileMeta], list[str], str, dict]:
+        _, meta = self._read_metadata()
+        snap = self._snapshot_rec(meta, int(version))
+        adds, removes = [], []
+        for m in self._read_manifest_list(snap["manifest-list"]):
+            for e in self._read_manifest(m["manifest-path"]):
+                if e["snapshot-id"] != int(version):
+                    continue
+                if e["status"] == ADDED:
+                    adds.append(_file_from_entry(e))
+                elif e["status"] == DELETED:
+                    removes.append(e["data-file"]["file-path"])
+        return adds, removes, snap["summary"].get("operation", "unknown"), \
+            dict(snap["summary"])
+
+    def properties(self) -> dict:
+        _, meta = self._read_metadata()
+        return dict(meta["properties"])
+
+    # --------------------------------------------------------------- commits
+    def commit(self, adds: list[DataFileMeta] = (), removes: list[str] = (), *,
+               schema: Schema | None = None, properties: dict | None = None,
+               operation: str = "append", extra_meta: dict | None = None,
+               max_retries: int = 5) -> str:
+        for _ in range(max_retries):
+            try:
+                return self._commit_once(adds, removes, schema, properties,
+                                         operation, extra_meta)
+            except CommitConflict:
+                continue
+        raise CommitConflict("iceberg commit retries exhausted")
+
+    def _commit_once(self, adds, removes, schema, properties, operation,
+                     extra_meta) -> str:
+        n, meta = self._read_metadata()
+        seq = meta["last-sequence-number"] + 1
+        sid = seq  # deterministic, ordered snapshot ids
+        ts = _now_ms()
+        removes = set(removes)
+
+        # -- carry forward manifests, rewriting only those touching removes
+        manifests: list[dict] = []
+        if meta["current-snapshot-id"] != -1:
+            parent = self._snapshot_rec(meta, meta["current-snapshot-id"])
+            for m in self._read_manifest_list(parent["manifest-list"]):
+                entries = [e for e in self._read_manifest(m["manifest-path"])
+                           if e["status"] != DELETED]
+                if removes and any(e["data-file"]["file-path"] in removes
+                                   for e in entries):
+                    new_entries = []
+                    for e in entries:
+                        p = e["data-file"]["file-path"]
+                        if p in removes:
+                            new_entries.append({**e, "status": DELETED,
+                                                "snapshot-id": sid})
+                        else:
+                            new_entries.append({**e, "status": EXISTING})
+                    rel = self._write_manifest(
+                        f"manifest-{sid}-rw{len(manifests)}.json", new_entries)
+                    manifests.append(_mf_entry(rel, sid, new_entries))
+                elif entries:
+                    manifests.append({**m, "added-files-count": 0,
+                                      "existing-files-count":
+                                          m.get("added-files-count", 0) +
+                                          m.get("existing-files-count", 0),
+                                      "deleted-files-count": 0})
+        if adds:
+            entries = [_file_to_entry(f, ADDED, sid) for f in adds]
+            rel = self._write_manifest(f"manifest-{sid}-add.json", entries)
+            manifests.append(_mf_entry(rel, sid, entries))
+
+        ml_rel = join(META_DIR, f"snap-{sid}.manifest-list.json")
+        self.fs.write_bytes(join(self.base, ml_rel),
+                            json.dumps({"manifests": manifests}).encode())
+
+        summary = {"operation": operation,
+                   "added-data-files": str(len(adds)),
+                   "deleted-data-files": str(len(removes))}
+        if extra_meta:
+            summary.update({f"xtable.{k}": json.dumps(v) if not
+                            isinstance(v, str) else v
+                            for k, v in extra_meta.items()})
+
+        new_meta = dict(meta)
+        if schema is not None:
+            ice = schema_to_ice(Schema(schema.fields,
+                                       meta["current-schema-id"] + 1))
+            new_meta["schemas"] = meta["schemas"] + [ice]
+            new_meta["current-schema-id"] = ice["schema-id"]
+            new_meta["last-column-id"] = max(f["id"] for f in ice["fields"])
+        if properties:
+            new_meta["properties"] = {**meta["properties"],
+                                      **{k: str(v) for k, v in properties.items()}}
+        new_meta.update({
+            "last-sequence-number": seq, "last-updated-ms": ts,
+            "current-snapshot-id": sid,
+            "snapshots": meta["snapshots"] + [{
+                "snapshot-id": sid,
+                "parent-snapshot-id": meta["current-snapshot-id"],
+                "sequence-number": seq, "timestamp-ms": ts,
+                "manifest-list": ml_rel, "summary": summary,
+                "schema-id": new_meta["current-schema-id"]}],
+            "snapshot-log": meta["snapshot-log"] + [
+                {"timestamp-ms": ts, "snapshot-id": sid}],
+        })
+        self._write_metadata(n + 1, new_meta)
+        return str(sid)
+
+
+def _mf_entry(rel: str, sid: int, entries: list[dict]) -> dict:
+    return {"manifest-path": rel, "added-snapshot-id": sid,
+            "added-files-count": sum(1 for e in entries if e["status"] == ADDED),
+            "existing-files-count": sum(1 for e in entries
+                                        if e["status"] == EXISTING),
+            "deleted-files-count": sum(1 for e in entries
+                                       if e["status"] == DELETED)}
+
+
+def _now_ms() -> int:
+    return time.time_ns() // 1_000_000

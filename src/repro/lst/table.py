@@ -1,0 +1,181 @@
+"""The "engine" role: a format-agnostic table API over any LST.
+
+Plays the part Spark/Trino/Flink play in the paper's demo — an engine that
+reads/writes a table *through one format's connector*.  Scan planning uses
+the metadata layer only (partition pruning + column min/max stats), which is
+the mechanism behind the paper's Scenario 3 (Trino running faster on Iceberg
+statistics): after an XTable sync, the same pruning power is available in
+every target format because the statistics were translated with the metadata.
+"""
+
+from __future__ import annotations
+
+import uuid
+from dataclasses import dataclass
+from typing import Callable, Iterator, Mapping
+
+import numpy as np
+
+from repro.lst import chunkfile, delta, hudi, iceberg
+from repro.lst.chunkfile import DataFileMeta
+from repro.lst.fs import join
+from repro.lst.schema import PartitionSpec, Schema, TableState
+
+FORMATS = {"delta": delta.DeltaTable, "iceberg": iceberg.IcebergTable,
+           "hudi": hudi.HudiTable}
+
+
+@dataclass(frozen=True)
+class Predicate:
+    """column <op> value; op in {==, <=, >=, <, >}. Stats-prunable."""
+    column: str
+    op: str
+    value: object
+
+    def may_match_file(self, f: DataFileMeta) -> bool:
+        # partition pruning
+        if self.column in f.partition_values:
+            pv = f.partition_values[self.column]
+            try:
+                pv = type(self.value)(pv)
+            except (TypeError, ValueError):
+                pass
+            return _cmp(pv, self.op, self.value, exact=True)
+        st = f.column_stats.get(self.column)
+        if st is None or st.min is None or st.max is None:
+            return True  # no stats -> cannot prune
+        if self.op == "==":
+            return st.min <= self.value <= st.max
+        if self.op in ("<", "<="):
+            return _cmp(st.min, self.op, self.value, exact=False)
+        if self.op in (">", ">="):
+            return _cmp(st.max, self.op, self.value, exact=False)
+        return True
+
+    def mask(self, col: np.ndarray) -> np.ndarray:
+        return _cmp(col, self.op, self.value, exact=True)
+
+
+def _cmp(lhs, op, rhs, exact: bool):
+    if op == "==":
+        return lhs == rhs if exact else True
+    return {"<": lhs < rhs, "<=": lhs <= rhs,
+            ">": lhs > rhs, ">=": lhs >= rhs}[op]
+
+
+class LakeTable:
+    """Engine-facing handle: open with ANY format, same logical table."""
+
+    def __init__(self, fs, base_path: str, handle):
+        self.fs = fs
+        self.base = base_path
+        self.handle = handle
+
+    # ------------------------------------------------------------- lifecycle
+    @classmethod
+    def create(cls, fs, base_path: str, schema: Schema, fmt: str,
+               partition_spec: PartitionSpec = PartitionSpec(),
+               properties: dict | None = None) -> "LakeTable":
+        handle = FORMATS[fmt].create(fs, base_path, schema, partition_spec,
+                                     properties)
+        return cls(fs, base_path, handle)
+
+    @classmethod
+    def open(cls, fs, base_path: str, fmt: str) -> "LakeTable":
+        return cls(fs, base_path, FORMATS[fmt].open(fs, base_path))
+
+    @property
+    def format(self) -> str:
+        return self.handle.format
+
+    def state(self, version: str | None = None) -> TableState:
+        return self.handle.snapshot(version)
+
+    def history(self) -> list[str]:
+        return self.handle.versions()
+
+    # ----------------------------------------------------------------- write
+    def append(self, columns: Mapping[str, np.ndarray], *,
+               rows_per_file: int | None = None) -> str:
+        """Append rows; splits into partition-directory chunk files."""
+        st = self.state()
+        pcols = st.partition_spec.column_names()
+        n = len(next(iter(columns.values())))
+        groups: dict[tuple, np.ndarray] = {(): np.arange(n)}
+        if pcols:
+            keys = np.stack([np.asarray(columns[c]).astype(str) for c in pcols], 1)
+            groups = {}
+            for i, k in enumerate(map(tuple, keys)):
+                groups.setdefault(k, []).append(i)
+            groups = {k: np.array(v) for k, v in groups.items()}
+        adds = []
+        for key, idx in groups.items():
+            pv = dict(zip(pcols, key))
+            sub = {c: np.asarray(a)[idx] for c, a in columns.items()}
+            splits = [sub] if not rows_per_file else [
+                {c: a[i:i + rows_per_file] for c, a in sub.items()}
+                for i in range(0, len(idx), rows_per_file)]
+            for part in splits:
+                fid = uuid.uuid4().hex[:12]
+                pdir = st.partition_spec.path_for(pv) if pv else "data"
+                rel = f"{pdir}/{fid}_{self.handle.current_version()}.chunk"
+                adds.append(chunkfile.write_chunk(
+                    self.fs, self.base, rel, part, partition_values=pv))
+        return self.handle.commit(adds, operation="WRITE")
+
+    def delete_where(self, pred: Predicate) -> str:
+        """Copy-on-write delete (paper §2, Listing 1 line 3)."""
+        st = self.state()
+        removes, adds = [], []
+        for f in st.files.values():
+            if not pred.may_match_file(f):
+                continue
+            cols, extra = chunkfile.read_chunk(self.fs, self.base, f.path)
+            keep = ~pred.mask(cols[pred.column])
+            if keep.all():
+                continue
+            removes.append(f.path)
+            if keep.any():
+                fid = uuid.uuid4().hex[:12]
+                pdir = f.path.rsplit("/", 1)[0]
+                rel = f"{pdir}/{fid}_{self.handle.current_version()}.chunk"
+                adds.append(chunkfile.write_chunk(
+                    self.fs, self.base, rel,
+                    {c: a[keep] for c, a in cols.items()},
+                    partition_values=f.partition_values, extra=extra))
+        if not removes:
+            return self.handle.current_version()
+        return self.handle.commit(adds, removes, operation="DELETE")
+
+    def evolve_schema(self, new_schema: Schema) -> str:
+        return self.handle.commit(schema=new_schema, operation="ALTER")
+
+    # ------------------------------------------------------------------ read
+    def scan(self, *predicates: Predicate,
+             version: str | None = None,
+             columns: list[str] | None = None) -> Iterator[dict]:
+        """Yield per-file column dicts; files pruned via metadata stats."""
+        st = self.state(version)
+        for f in self.plan_files(st, predicates):
+            cols, _ = chunkfile.read_chunk(self.fs, self.base, f.path)
+            mask = np.ones(f.record_count, bool)
+            for p in predicates:
+                if p.column in cols:
+                    mask &= p.mask(cols[p.column])
+            if columns:
+                cols = {c: cols[c] for c in columns if c in cols}
+            yield {c: a[mask] if a.shape[:1] == mask.shape else a
+                   for c, a in cols.items()}
+
+    def plan_files(self, st: TableState,
+                   predicates: tuple[Predicate, ...] = ()) -> list[DataFileMeta]:
+        """Scan planning over metadata only — the Scenario-3 mechanism."""
+        return [f for f in st.files.values()
+                if all(p.may_match_file(f) for p in predicates)]
+
+    def read_all(self, *predicates: Predicate, version: str | None = None) -> dict:
+        batches = list(self.scan(*predicates, version=version))
+        if not batches:
+            return {}
+        return {c: np.concatenate([b[c] for b in batches])
+                for c in batches[0]}

@@ -1,0 +1,209 @@
+"""Mamba-2 SSD (state-space duality) mixer — XLA path.
+
+Implements the chunked SSD algorithm of Dao & Gu (arXiv:2405.21060):
+sequence split into chunks of length Q; the intra-chunk term is a small
+quadratic attention-like contraction, the inter-chunk term is a linear
+recurrence over per-chunk states carried by ``lax.scan``.
+
+Covers both assigned SSM flavours:
+* mamba2-2.7b — multi-head SSD (head_dim 64, d_state 128)
+* jamba's Mamba-1-style mixer — modeled as SSD with head_dim 1 (Mamba-1 is
+  the head_dim=1 special case of SSD, per the SSD paper's duality argument)
+
+The Pallas kernel (`repro.kernels.ssd`) is the TPU production path for the
+same computation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, SSMConfig
+from repro.models.param import ParamSpec
+
+f32 = jnp.float32
+
+
+def ssm_template(cfg: ModelConfig) -> dict:
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    conv_ch = s.d_inner + 2 * s.n_groups * s.d_state
+    return {
+        "w_in": ParamSpec((d, 2 * s.d_inner), ("embed", "mlp"), cfg.dtype),
+        "w_bc": ParamSpec((d, 2 * s.n_groups * s.d_state), ("embed", None),
+                          cfg.dtype),
+        "w_dt": ParamSpec((d, s.n_heads), ("embed", "heads"), cfg.dtype),
+        "dt_bias": ParamSpec((s.n_heads,), ("heads",), "float32", "zeros"),
+        "a_log": ParamSpec((s.n_heads,), ("heads",), "float32", "zeros"),
+        "conv_w": ParamSpec((s.conv_width, conv_ch), (None, "mlp"),
+                            cfg.dtype, "normal", 0.2),
+        "skip_d": ParamSpec((s.n_heads,), ("heads",), "float32", "ones"),
+        "w_out": ParamSpec((s.d_inner, d), ("mlp", "embed"), cfg.dtype),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv via shifted adds. x: (b,s,c); w: (cw,c).
+
+    state: (b, cw-1, c) trailing context (decode); returns (y, new_state).
+    """
+    cw = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(cw))
+    return y, xp[:, -(cw - 1):, :]
+
+
+def _split_proj(x, p, s: SSMConfig):
+    """Project + conv + activations -> (xh, z, B, C, dt)."""
+    zi = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z, xin = jnp.split(zi, 2, axis=-1)
+    bc = jnp.einsum("bsd,de->bse", x, p["w_bc"])
+    conv_in = jnp.concatenate([xin, bc], axis=-1)
+    return z, conv_in
+
+
+def _post_conv(conv_ed, p, s: SSMConfig):
+    conv_ed = jax.nn.silu(conv_ed)
+    xin = conv_ed[..., :s.d_inner]
+    B = conv_ed[..., s.d_inner:s.d_inner + s.n_groups * s.d_state]
+    C = conv_ed[..., s.d_inner + s.n_groups * s.d_state:]
+    b, sl = xin.shape[:2]
+    xh = xin.reshape(b, sl, s.n_heads, s.head_dim)
+    B = B.reshape(b, sl, s.n_groups, s.d_state)
+    C = C.reshape(b, sl, s.n_groups, s.d_state)
+    return xh, B, C
+
+
+def ssd_forward(x, p, cfg: ModelConfig, conv_state=None, ssm_state=None,
+                return_state: bool = False):
+    """Full-sequence SSD. x: (b, s, d_model) -> (y, (conv_state, ssm_state)).
+
+    Chunked: s must be divisible by the chunk length for the scan path
+    (padded if not).
+    """
+    s: SSMConfig = cfg.ssm
+    b, seqlen, _ = x.shape
+    z, conv_in = _split_proj(x, p, s)
+    conv_out, conv_state_new = _causal_conv(conv_in, p["conv_w"], conv_state)
+    xh, B, C = _post_conv(conv_out, p, s)
+
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["w_dt"]).astype(f32) +
+        p["dt_bias"].astype(f32))                              # (b,s,h)
+    A = -jnp.exp(p["a_log"].astype(f32))                       # (h,)
+
+    Q = min(s.chunk, seqlen)
+    pad = (-seqlen) % Q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    nc = xh.shape[1] // Q
+    hpg = s.n_heads // s.n_groups          # heads per group
+
+    def chunk(a):  # (b, nc*Q, ...) -> (b, nc, Q, ...)
+        return a.reshape(a.shape[0], nc, Q, *a.shape[2:])
+
+    xh_c, B_c, C_c, dt_c = chunk(xh), chunk(B), chunk(C), chunk(dt)
+    dA = dt_c * A[None, None, None, :]                         # (b,nc,Q,h)
+    cum = jnp.cumsum(dA, axis=2)                               # (b,nc,Q,h)
+    total = cum[:, :, -1:, :]                                  # (b,nc,1,h)
+
+    # ---- intra-chunk (quadratic within Q) ----
+    cb = jnp.einsum("bcqgn,bckgn->bcgqk", C_c, B_c,
+                    preferred_element_type=f32)                # (b,nc,g,Q,Q)
+    # decay matrix L[q,k] = exp(cum_q - cum_k) for q >= k
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # (b,nc,Q,Q,h)
+    ltri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(ltri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    xdt = xh_c.astype(f32) * dt_c[..., None]                   # (b,nc,Q,h,p)
+    # expand groups->heads on the fly: head h uses group h // hpg
+    scores_h = jnp.repeat(cb, hpg, axis=2) if s.n_groups > 1 else \
+        jnp.broadcast_to(cb, (b, nc, s.n_heads, Q, Q))
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp",
+                         (scores_h * jnp.moveaxis(L, -1, 2)), xdt)
+
+    # ---- inter-chunk state recurrence ----
+    # chunk-local state: S_c = sum_k exp(total - cum_k) * dt_k * B_k ⊗ x_k
+    w_state = jnp.exp(total - cum)                             # (b,nc,Q,h)
+    BX = jnp.einsum("bckgn,bckhp->bchnp",
+                    B_c, (xdt * w_state[..., None]).astype(f32))
+    decay = jnp.exp(total[:, :, 0, :])                         # (b,nc,h)
+
+    def step(carry, inp):
+        bx, dec = inp                                           # (b,h,n,p),(b,h)
+        new = carry * dec[..., None, None] + bx
+        return new, carry                                       # emit PREV state
+
+    init = ssm_state.astype(f32) if ssm_state is not None else \
+        jnp.zeros((b, s.n_heads, s.d_state, s.head_dim), f32)
+    final_state, prev_states = jax.lax.scan(
+        step, init, (jnp.moveaxis(BX, 1, 0), jnp.moveaxis(decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)              # (b,nc,h,n,p)
+
+    # y_inter[q] = (C_q * exp(cum_q)) . S_prev
+    Ch = jnp.repeat(C_c, hpg, axis=3) if s.n_groups > 1 else \
+        jnp.broadcast_to(C_c, (b, nc, Q, s.n_heads, s.d_state))
+    y_inter = jnp.einsum("bcqhn,bchnp->bcqhp",
+                         Ch.astype(f32) * jnp.exp(cum)[..., None], prev_states)
+
+    y = (y_intra + y_inter).reshape(b, nc * Q, s.n_heads, s.head_dim)
+    if pad:
+        y = y[:, :seqlen]
+    y = y + xh.reshape(b, nc * Q, s.n_heads, s.head_dim)[:, :seqlen] * \
+        p["skip_d"].astype(f32)[None, None, :, None]
+    y = y.reshape(b, seqlen, s.d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    if return_state:
+        return out, (conv_state_new, final_state.astype(f32))
+    return out
+
+
+def ssd_decode(x, p, cfg: ModelConfig, conv_state, ssm_state):
+    """Single-token SSD step. x: (b, 1, d_model) -> (y, (conv', ssm'))."""
+    s: SSMConfig = cfg.ssm
+    b = x.shape[0]
+    z, conv_in = _split_proj(x, p, s)
+    conv_out, conv_state_new = _causal_conv(conv_in, p["conv_w"], conv_state)
+    xh, B, C = _post_conv(conv_out, p, s)
+    xh, B, C = xh[:, 0], B[:, 0], C[:, 0]      # (b,h,p),(b,g,n),(b,g,n)
+
+    dt = jax.nn.softplus(
+        jnp.einsum("bd,dh->bh", x[:, 0], p["w_dt"]).astype(f32) +
+        p["dt_bias"].astype(f32))                              # (b,h)
+    A = -jnp.exp(p["a_log"].astype(f32))
+    dA = jnp.exp(dt * A[None, :])                              # (b,h)
+
+    hpg = s.n_heads // s.n_groups
+    Bh = jnp.repeat(B, hpg, axis=1) if s.n_groups > 1 else \
+        jnp.broadcast_to(B, (b, s.n_heads, s.d_state))
+    Ch = jnp.repeat(C, hpg, axis=1) if s.n_groups > 1 else \
+        jnp.broadcast_to(C, (b, s.n_heads, s.d_state))
+
+    # h' = h * exp(dt A) + dt * (B ⊗ x)
+    upd = dt[..., None, None] * Bh[..., :, None].astype(f32) * \
+        xh[..., None, :].astype(f32)                           # (b,h,n,p)
+    new_state = ssm_state * dA[..., None, None] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(f32), new_state)
+    y = y + xh.astype(f32) * p["skip_d"].astype(f32)[None, :, None]
+    y = y.reshape(b, 1, s.d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return out, (conv_state_new, new_state)
+
+
+def ssm_cache_template(cfg: ModelConfig, batch: int) -> dict:
+    s: SSMConfig = cfg.ssm
+    conv_ch = s.d_inner + 2 * s.n_groups * s.d_state
+    return {
+        "conv": ParamSpec((batch, s.conv_width - 1, conv_ch), (("batch",) +
+                          (None, None)), cfg.dtype, "zeros"),
+        "state": ParamSpec((batch, s.n_heads, s.d_state, s.head_dim),
+                           ("batch", "heads", None, None), "float32", "zeros"),
+    }

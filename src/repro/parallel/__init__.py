@@ -1,0 +1,3 @@
+from repro.parallel.sharding import Sharder, DEFAULT_RULES
+
+__all__ = ["Sharder", "DEFAULT_RULES"]

@@ -1,0 +1,113 @@
+"""Logical-axis sharding: one rule table maps model semantics to mesh axes.
+
+Every parameter/activation dimension carries a logical name ("embed",
+"heads", "mlp", ...). A ``Sharder`` resolves names to mesh axes with
+divisibility checking and per-tensor duplicate avoidance, producing
+``PartitionSpec``s for:
+
+* parameter templates (FSDP over ``data``, TP over ``model``, EP for MoE)
+* activation constraints inside the model (batch over ``pod``+``data``,
+  heads/mlp/vocab over ``model``, optional KV-sequence sharding over
+  ``data`` for long-context decode)
+
+Rules are *preference chains*: ``"experts": (("model",), ("data",))`` tries
+expert-parallelism over ``model`` first, falls back to ``data``, then
+replicates — so the same table serves dbrx (16 experts, EP=16) and granite
+(40 experts, replicated expert axis but sharded d_ff) without per-arch code.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# logical axis -> chain of candidate mesh-axis groups (each group is used
+# jointly, e.g. batch over pod AND data).
+DEFAULT_RULES: dict = {
+    # parameters
+    "vocab": (("model",),),
+    "embed": (("data",),),                  # FSDP axis
+    "mlp": (("model",),),                   # TP axis
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "head_dim": (),
+    "experts": (("model",), ("data",)),     # EP preference chain
+    "layers": (),                           # scan dim never sharded
+    # activations
+    "batch": (("pod", "data"),),
+    "seq": (),
+    # cycle-boundary activations (= remat residuals): sequence dim sharded
+    # over the TP axis so saved activations are 16x smaller (Megatron-SP)
+    "act_seq": (("model",),),
+    # score q-dim fallback sharding for archs whose head count does not
+    # divide the TP axis (granite: 24 heads on model=16)
+    "attn_q": (("model",),),
+    "kvseq": (),                            # set to (("data",),) for 500k decode
+    "frames": (),
+    None: (),
+}
+
+
+def _axes_in_mesh(group, mesh_axes: dict) -> tuple:
+    return tuple(a for a in group if a in mesh_axes)
+
+
+@dataclass
+class Sharder:
+    mesh_axes: dict                       # name -> size, e.g. {"data":16,...}
+    rules: dict = field(default_factory=lambda: dict(DEFAULT_RULES))
+
+    @staticmethod
+    def for_mesh(mesh, overrides: dict | None = None) -> "Sharder":
+        rules = dict(DEFAULT_RULES)
+        rules.update(overrides or {})
+        return Sharder(dict(zip(mesh.axis_names, mesh.devices.shape)), rules)
+
+    @staticmethod
+    def null() -> "Sharder":
+        """Single-device: everything replicated (smoke tests)."""
+        return Sharder({})
+
+    # ------------------------------------------------------------ resolution
+    def resolve(self, axes: tuple, shape: tuple) -> P:
+        """Logical axes tuple -> PartitionSpec, divisible + duplicate-free."""
+        used: set = set()
+        out = []
+        for name, dim in zip(axes, shape):
+            chain = self.rules.get(name, ())
+            picked = None
+            for group in chain:
+                grp = tuple(a for a in _axes_in_mesh(group, self.mesh_axes)
+                            if a not in used)
+                if not grp:
+                    continue
+                total = math.prod(self.mesh_axes[a] for a in grp)
+                if dim % total == 0:
+                    picked = grp
+                    used.update(grp)
+                    break
+            out.append(picked if picked is None or len(picked) > 1
+                       else picked[0])
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    # -------------------------------------------------------------- helpers
+    def template_pspecs(self, tpl):
+        """Param template -> pytree of PartitionSpec."""
+        from repro.models.param import is_spec
+        return jax.tree.map(lambda s: self.resolve(s.axes, s.shape), tpl,
+                            is_leaf=is_spec)
+
+    def constrain(self, x, *axes):
+        """Sharding constraint on an activation (no-op without a mesh)."""
+        if not self.mesh_axes:
+            return x
+        spec = self.resolve(tuple(axes), x.shape)
+        return jax.lax.with_sharding_constraint(x, spec)
+
+    def __call__(self, x, *axes):
+        return self.constrain(x, *axes)

@@ -1,0 +1,89 @@
+"""Batched serving engine restoring weights through an XTable-translated view.
+
+Scenario 3 transplanted: the trainer commits checkpoints in Hudi-style
+metadata; the *server* opens the same directory as an Iceberg table (after
+XTable sync) because snapshot+manifest metadata with file statistics is the
+right shape for a serving fleet's scan planning. No weight files were
+copied.
+
+The engine itself: synchronous batched decode with greedy/temperature
+sampling over prefill + step functions built from the model zoo.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import LSTCheckpointManager
+from repro.models.model import Model
+from repro.models.param import template_shapes
+
+
+@dataclass
+class Request:
+    prompt: list            # token ids
+    max_new: int = 16
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, *, cache_len: int = 256):
+        self.model = model
+        self.params = params
+        self.cache_len = cache_len
+        self._prefill = jax.jit(
+            lambda p, t, e=None: model.prefill(
+                p, t, cache_len=cache_len,
+                **({"enc_embeds": e} if model.cfg.encoder else {})))
+        self._step = jax.jit(model.decode_step)
+
+    @classmethod
+    def from_lake(cls, model: Model, fs, ckpt_path: str, *,
+                  fmt: str = "iceberg", cache_len: int = 256) -> "ServeEngine":
+        """Restore weights through the translated ``fmt`` view."""
+        mgr = LSTCheckpointManager(fs, ckpt_path, fmt=fmt, sync_targets=())
+        shapes = template_shapes(model.param_template())
+        _, state = mgr.restore_pytree({"params": shapes}, fmt=fmt)
+        return cls(model, jax.tree.map(jnp.asarray, state["params"]),
+                   cache_len=cache_len)
+
+    def generate(self, requests: list, *, temperature: float = 0.0,
+                 seed: int = 0) -> list:
+        """Synchronous batched generation (greedy when temperature == 0)."""
+        b = len(requests)
+        max_prompt = max(len(r.prompt) for r in requests)
+        max_new = max(r.max_new for r in requests)
+        pad = self.model.cfg.vocab_size - 1
+        toks = np.full((b, max_prompt), pad, np.int32)
+        for i, r in enumerate(requests):
+            toks[i, -len(r.prompt):] = r.prompt      # left-pad
+        enc = None
+        if self.model.cfg.encoder:
+            enc = jnp.zeros((b, self.model.cfg.encoder.n_frames,
+                             self.model.cfg.d_model), self.model.cfg.dtype)
+        args = (self.params, jnp.asarray(toks)) + \
+            ((enc,) if enc is not None else ())
+        logits, cache = self._prefill(*args)
+        key = jax.random.PRNGKey(seed)
+        outs = [[] for _ in range(b)]
+        pos = jnp.full((b,), max_prompt, jnp.int32)
+        tok = self._sample(logits, temperature, key)
+        for step in range(max_new):
+            for i in range(b):
+                if step < requests[i].max_new:
+                    outs[i].append(int(tok[i]))
+            key, sub = jax.random.split(key)
+            logits, cache = self._step(self.params, cache, tok, pos)
+            tok = self._sample(logits, temperature, sub)
+            pos = pos + 1
+        return outs
+
+    @staticmethod
+    def _sample(logits, temperature: float, key):
+        if temperature == 0.0:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / temperature, -1) \
+            .astype(jnp.int32)

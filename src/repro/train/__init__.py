@@ -1,0 +1,5 @@
+from repro.train.loop import (TrainState, chunked_cross_entropy,
+                              make_train_step, train_state_template)
+
+__all__ = ["TrainState", "chunked_cross_entropy", "make_train_step",
+           "train_state_template"]
