@@ -7,6 +7,8 @@ paper without numbered tables, so each benchmark pins one §3 property):
 * omni-direction — the full 6-cell (source, target) sync matrix
 * scaling        — translation cost vs. number of data files (metadata size)
 * checkpoints    — LST checkpoint save / XTable sync / restore throughput
+* concurrency    — the planner/executor architecture: a multi-dataset
+                   2-target matrix synced serially vs. on the thread pool
 """
 
 from __future__ import annotations
@@ -136,5 +138,54 @@ def bench_checkpoint_throughput(report):
            f"{nbytes / dt_restore / 2**20:.0f}MiB/s")
 
 
+def bench_serial_vs_concurrent(report):
+    """Planner/executor payoff: 4 datasets x 2 targets, FULL bootstrap and
+    an incremental backlog, synced serially (max_workers=1) vs. on the
+    thread pool. Same plan, same units — only the execution strategy moves."""
+    fs = LocalFS()
+
+    def build_fleet():
+        bases = []
+        for _ in range(4):
+            base, t = _mk_table(fs, "delta", n_commits=8, rows_per_commit=256)
+            bases.append((base, t))
+        return bases
+
+    def cfg_for(bases):
+        return SyncConfig.from_dict({
+            "sourceFormat": "DELTA",
+            "targetFormats": ["ICEBERG", "HUDI"],
+            "datasets": [{"tableBasePath": b} for b, _ in bases]})
+
+    def backlog(bases):
+        rng = np.random.default_rng(1)
+        for _, t in bases:
+            for _ in range(6):
+                n = 128
+                t.append({"k": rng.integers(0, 1 << 30, n),
+                          "part": np.array([f"p{i % 4}" for i in range(n)]),
+                          "val": rng.random(n)})
+
+    times = {}
+    for label, workers in (("serial", 1), ("concurrent", 8)):
+        bases = build_fleet()
+        cfg = cfg_for(bases)
+        t0 = time.perf_counter()
+        res = run_sync(cfg, fs, max_workers=workers)
+        times[f"full.{label}"] = time.perf_counter() - t0
+        assert all(r.ok and r.mode == "FULL" for r in res), res
+        backlog(bases)
+        t0 = time.perf_counter()
+        res = run_sync(cfg, fs, max_workers=workers)
+        times[f"incr.{label}"] = time.perf_counter() - t0
+        assert all(r.ok and r.mode == "INCREMENTAL" for r in res), res
+    for phase in ("full", "incr"):
+        s, c = times[f"{phase}.serial"], times[f"{phase}.concurrent"]
+        report(f"executor.{phase}.serial", s * 1e6, "4 datasets x 2 targets")
+        report(f"executor.{phase}.concurrent", c * 1e6,
+               f"speedup={s / max(c, 1e-9):.2f}x")
+
+
 ALL = [bench_low_overhead, bench_incremental_vs_full, bench_omni_matrix,
-       bench_file_count_scaling, bench_checkpoint_throughput]
+       bench_file_count_scaling, bench_checkpoint_throughput,
+       bench_serial_vs_concurrent]

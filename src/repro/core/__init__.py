@@ -1,13 +1,18 @@
 """XTABLE core: omni-directional, incremental LST metadata translation.
 
 The paper's contribution, implemented as described in §3: source readers and
-target writers around a unified internal representation, orchestrated by the
-core sync logic with persisted state, caching, and telemetry.
+target writers around a unified internal representation, orchestrated as an
+explicit plan -> shared-metadata-cache -> concurrent-execute pipeline (see
+``plan.py`` / ``metadata_cache.py`` / ``executor.py``; ``sync.py`` is the
+facade with persisted state, caching, and telemetry).
 """
 
 from repro.core.config import DatasetConfig, SyncConfig
+from repro.core.executor import SyncExecutor
 from repro.core.ir import (InternalDataFile, InternalSnapshot, InternalTable,
                            TableChange)
+from repro.core.metadata_cache import MetadataCache, TableMetadataIndex
+from repro.core.plan import SyncPlan, SyncPlanner, SyncUnit
 from repro.core.sources import make_source
 from repro.core.sync import SyncResult, XTableSyncer, run_sync
 from repro.core.targets import make_target
@@ -16,4 +21,5 @@ from repro.core.telemetry import Telemetry
 __all__ = ["DatasetConfig", "SyncConfig", "InternalDataFile",
            "InternalSnapshot", "InternalTable", "TableChange", "make_source",
            "make_target", "run_sync", "SyncResult", "XTableSyncer",
-           "Telemetry"]
+           "Telemetry", "SyncPlan", "SyncPlanner", "SyncUnit", "SyncExecutor",
+           "MetadataCache", "TableMetadataIndex"]

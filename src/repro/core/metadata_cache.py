@@ -1,0 +1,165 @@
+"""Shared incremental metadata index (the cache stage of plan -> execute).
+
+The seed syncer re-replayed the source log per inspected commit
+(``handle.snapshot(commit)`` inside ``get_changes``), making an N-commit
+incremental backlog O(N^2) in log-replay work — per *target*.  This module
+replaces that with a single-pass index: each table's log is replayed exactly
+once (``handle.replay()``), and every ``snapshot(commit)`` / ``changes(commit)``
+any planner or executor asks for is served from that one pass.  The index is
+shared across all targets of a dataset, and across datasets when they alias
+the same table.
+
+Thread-safety: executor workers for the targets of one dataset hit the same
+index concurrently; the build happens once under a lock and the built
+structures are read-only afterwards (snapshot materializations are memoized
+under the same lock).
+"""
+
+from __future__ import annotations
+
+import threading
+
+from repro.lst.schema import CommitEntry, TableState
+from repro.lst.table import FORMATS
+
+
+class TableMetadataIndex:
+    """One-replay commit index over a single LST handle.
+
+    * ``head()`` is cheap (a directory listing / pointer read) and never
+      triggers a replay — SKIP planning stays O(1).
+    * ``entry(commit)`` / ``versions()`` / ``state_at(commit)`` build the
+      index on first use; ``replays`` counts how many full log replays have
+      happened (the instrumentation the O(commits) guarantee is tested by).
+    """
+
+    def __init__(self, handle):
+        self.handle = handle
+        self.replays = 0
+        self._lock = threading.RLock()
+        self._built_head: str | None = None
+        self._base: TableState | None = None
+        self._order: list[str] = []
+        self._entries: dict[str, CommitEntry] = {}
+        self._state_memo: dict[str, TableState] = {}
+
+    # ------------------------------------------------------------- building
+    def head(self) -> str:
+        return self.handle.current_version()
+
+    def ensure_built(self) -> "TableMetadataIndex":
+        """Build from ONE log replay; no staleness check once built.
+
+        Per-commit queries during a sync run must not re-read the table head
+        (for iceberg that is a full metadata-JSON parse) hundreds of times —
+        ``refresh()`` is the explicit staleness point, and a missing commit
+        triggers one refresh attempt before failing.
+        """
+        with self._lock:
+            if self._built_head is None:
+                self._rebuild()
+            return self
+
+    def refresh(self) -> "TableMetadataIndex":
+        """Rebuild if (and only if) the table head moved since the build."""
+        with self._lock:
+            if self._built_head != self.head():
+                self._rebuild()
+            return self
+
+    def _rebuild(self) -> None:
+        head = self.head()
+        base, entries = self.handle.replay()
+        self.replays += 1
+        self._base = base
+        self._order = [e.version for e in entries]
+        self._entries = {e.version: e for e in entries}
+        self._state_memo = {}
+        self._built_head = head
+
+    # -------------------------------------------------------------- queries
+    def versions(self) -> list[str]:
+        self.refresh()
+        return list(self._order)
+
+    def has(self, commit: str) -> bool:
+        self.ensure_built()
+        if commit in self._entries:
+            return True
+        return commit in self.refresh()._entries
+
+    def entry(self, commit: str) -> CommitEntry:
+        self.ensure_built()
+        if commit not in self._entries:
+            self.refresh()
+        return self._entries[commit]
+
+    def state_at(self, commit: str | None = None) -> TableState:
+        """Materialize ``snapshot(commit)`` by folding indexed entries.
+
+        Folds from the nearest earlier memoized state (or the replay base),
+        so repeated asks — every target wants the head snapshot — cost one
+        dict fold total, and zero further file reads.
+        """
+        if commit is None:
+            self.refresh()
+        else:
+            self.ensure_built()
+        with self._lock:
+            if commit is None:
+                commit = self._built_head
+            if self._base is not None and commit == self._base.version:
+                return self._base
+            if commit in self._state_memo:
+                return self._state_memo[commit]
+            if commit not in self._entries:
+                self.refresh()
+            if commit not in self._entries:
+                raise KeyError(f"commit {commit} not in indexed history")
+            upto = self._order.index(commit)
+            # nearest memoized prefix to fold from
+            start, files = -1, dict(self._base.files) if self._base else {}
+            for i in range(upto - 1, -1, -1):
+                v = self._order[i]
+                if v in self._state_memo:
+                    start, files = i, dict(self._state_memo[v].files)
+                    break
+            for i in range(start + 1, upto + 1):
+                e = self._entries[self._order[i]]
+                for p in e.removes:
+                    files.pop(p, None)
+                for f in e.adds:
+                    files[f.path] = f
+            e = self._entries[commit]
+            st = TableState(self.handle.format, commit, e.timestamp_ms,
+                            e.schema, e.partition_spec, files,
+                            dict(e.properties))
+            self._state_memo[commit] = st
+            return st
+
+
+class MetadataCache:
+    """(format, base_path) -> TableMetadataIndex, shared across a sync run.
+
+    All targets of a dataset (and all datasets of a config) resolve their
+    source questions through one cache instance, which is what turns the
+    per-target O(commits^2) replay work into one O(commits) pass per table.
+    """
+
+    def __init__(self, fs):
+        self.fs = fs
+        self._lock = threading.Lock()
+        self._indexes: dict[tuple[str, str], TableMetadataIndex] = {}
+
+    def index(self, fmt: str, base_path: str) -> TableMetadataIndex:
+        key = (fmt, base_path)
+        with self._lock:
+            idx = self._indexes.get(key)
+            if idx is None:
+                idx = TableMetadataIndex(FORMATS[fmt].open(self.fs, base_path))
+                self._indexes[key] = idx
+            return idx
+
+    def total_replays(self) -> int:
+        with self._lock:
+            return sum(i.replays for i in self._indexes.values())

@@ -2,8 +2,13 @@
 
 One reader per LST format. Each uses the format's own access layer (the way
 real XTable links the Delta Kernel / Iceberg API / Hudi client) and emits IR
-snapshots and per-commit change sets. Readers are cached by the core logic so
-multiple targets share one pass over source metadata.
+snapshots and per-commit change sets.
+
+Readers sit on a :class:`~repro.core.metadata_cache.TableMetadataIndex`: the
+source log is replayed once per table and every snapshot/change question —
+for every commit, for every target — is answered from that single pass.
+The index is shared across all targets of a dataset via the run's
+``MetadataCache``, so N targets still cost one replay.
 """
 
 from __future__ import annotations
@@ -11,9 +16,11 @@ from __future__ import annotations
 from typing import Protocol
 
 from repro.core.ir import InternalDataFile, InternalSnapshot, TableChange
+from repro.core.metadata_cache import TableMetadataIndex
 from repro.lst.delta import DeltaTable
 from repro.lst.hudi import HudiTable
 from repro.lst.iceberg import IcebergTable
+from repro.lst.schema import CommitEntry
 
 
 class ConversionSource(Protocol):
@@ -26,24 +33,35 @@ class ConversionSource(Protocol):
     def has_commit(self, token: str) -> bool: ...
 
 
+def _change_extra(info: dict) -> dict:
+    """Commit user-metadata carried into targets (strings, minus internals)."""
+    return {k: v for k, v in (info or {}).items()
+            if isinstance(v, str) and not k.startswith("xtable.")
+            and k not in ("schema", "timestamp", "operation")}
+
+
 class _HandleSource:
     """Shared implementation over the common format-handle protocol."""
 
     handle_cls = None
     format = "?"
 
-    def __init__(self, fs, base_path: str):
+    def __init__(self, fs, base_path: str, index: TableMetadataIndex | None = None):
         self.fs = fs
         self.base = base_path
-        self.handle = self.handle_cls.open(fs, base_path)
-        self._change_cache: dict[str, TableChange] = {}
+        if index is not None:
+            self.index = index
+            self.handle = index.handle
+        else:
+            self.handle = self.handle_cls.open(fs, base_path)
+            self.index = TableMetadataIndex(self.handle)
 
     # -- snapshots ---------------------------------------------------------
     def current_commit(self) -> str:
-        return self.handle.current_version()
+        return self.index.head()
 
     def get_snapshot(self, commit: str | None = None) -> InternalSnapshot:
-        st = self.handle.snapshot(commit)
+        st = self.index.state_at(commit)
         props = dict(st.properties)
         props.update(self._latest_commit_meta())
         return InternalSnapshot(
@@ -56,17 +74,14 @@ class _HandleSource:
 
     def _latest_commit_meta(self) -> dict:
         """User metadata of the head commit (carried into targets)."""
-        versions = self.handle.versions()
+        versions = self.index.versions()
         if not versions:
             return {}
-        try:
-            return self.get_changes(versions[-1]).extra
-        except Exception:
-            return {}
+        return _change_extra(self.index.entry(versions[-1]).info)
 
     # -- incremental -------------------------------------------------------
     def get_commits_since(self, token: str | None) -> list[str]:
-        versions = self.handle.versions()
+        versions = self.index.versions()
         if token is None:
             return versions
         if token not in versions:
@@ -74,25 +89,16 @@ class _HandleSource:
         return versions[versions.index(token) + 1:]
 
     def has_commit(self, token: str) -> bool:
-        return token in self.handle.versions()
+        return self.index.has(token)
 
     def get_changes(self, commit: str) -> TableChange:
-        if commit in self._change_cache:
-            return self._change_cache[commit]
-        adds, removes, op, info = self.handle.changes(commit)
-        # schema may have evolved at this commit; record the schema-as-of
-        schema = self.handle.snapshot(commit).schema
-        extra = {k: v for k, v in (info or {}).items()
-                 if isinstance(v, str) and not k.startswith("xtable.")
-                 and k not in ("schema", "timestamp", "operation")}
-        ch = TableChange(
+        e: CommitEntry = self.index.entry(commit)
+        return TableChange(
             source_format=self.format, source_commit=commit,
-            timestamp_ms=self.handle.snapshot(commit).timestamp_ms,
-            operation=op,
-            adds=tuple(InternalDataFile.from_meta(f) for f in adds),
-            removes=tuple(removes), schema=schema, extra=extra)
-        self._change_cache[commit] = ch
-        return ch
+            timestamp_ms=e.timestamp_ms, operation=e.operation,
+            adds=tuple(InternalDataFile.from_meta(f) for f in e.adds),
+            removes=tuple(e.removes), schema=e.schema,
+            extra=_change_extra(e.info))
 
 
 class DeltaSource(_HandleSource):
@@ -106,36 +112,31 @@ class IcebergSource(_HandleSource):
 
     def get_commits_since(self, token: str | None) -> list[str]:
         # iceberg "-1" denotes the empty pre-first-snapshot state
-        versions = self.handle.versions()
-        if token in (None, "-1"):
-            return versions
-        if token not in versions:
-            raise KeyError(f"token {token} not in source history")
-        return versions[versions.index(token) + 1:]
+        if token == "-1":
+            return self.index.versions()
+        return super().get_commits_since(token)
 
     def has_commit(self, token: str) -> bool:
-        return token == "-1" or token in self.handle.versions()
+        return token == "-1" or super().has_commit(token)
 
 
 class HudiSource(_HandleSource):
     handle_cls = HudiTable
     format = "hudi"
 
-    def has_commit(self, token: str) -> bool:
-        # "0" denotes the empty pre-first-instant state
-        return token == "0" or token in self.handle.versions()
-
     def get_commits_since(self, token: str | None) -> list[str]:
-        versions = self.handle.versions()
-        if token in (None, "0"):
-            return versions
-        if token not in versions:
-            raise KeyError(f"token {token} not in source history")
-        return versions[versions.index(token) + 1:]
+        # hudi "0" denotes the empty pre-first-instant state
+        if token == "0":
+            return self.index.versions()
+        return super().get_commits_since(token)
+
+    def has_commit(self, token: str) -> bool:
+        return token == "0" or super().has_commit(token)
 
 
 SOURCES = {"delta": DeltaSource, "iceberg": IcebergSource, "hudi": HudiSource}
 
 
-def make_source(fmt: str, fs, base_path: str) -> ConversionSource:
-    return SOURCES[fmt](fs, base_path)
+def make_source(fmt: str, fs, base_path: str,
+                index: TableMetadataIndex | None = None) -> ConversionSource:
+    return SOURCES[fmt](fs, base_path, index)

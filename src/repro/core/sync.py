@@ -1,16 +1,22 @@
-"""XTable core logic (paper §3.1): orchestrates the translation.
+"""XTable core logic (paper §3.1): a facade over plan -> cache -> execute.
 
 Responsibilities, per the paper: initializing components, managing sources
 and targets, caching for efficiency, state management for recovery and
 incremental processing, telemetry for monitoring.
 
-Sync decision per target:
+The work is split across three layers (see ``plan.py``, ``metadata_cache.py``
+and ``executor.py``):
 
-* target has no sync state            -> FULL snapshot sync
-* target's token missing from source  -> FULL (history cleaned / diverged)
-* otherwise                           -> INCREMENTAL, commit-by-commit
+1. :class:`~repro.core.plan.SyncPlanner` inspects all sources and targets and
+   emits a ``SyncPlan`` of FULL / INCREMENTAL / SKIP units with exact commit
+   ranges — decisions, testable without executing anything.
+2. :class:`~repro.core.metadata_cache.MetadataCache` replays each source log
+   ONCE and serves every per-commit snapshot/change from that pass, shared
+   by all targets of a dataset.
+3. :class:`~repro.core.executor.SyncExecutor` runs independent units on a
+   thread pool with per-unit telemetry and fail isolation.
 
-Both paths are idempotent: rerunning a sync that is already current is a
+Both paths stay idempotent: rerunning a sync that is already current is a
 no-op (``skip``), and a crash between two targets leaves each target either
 untouched or atomically advanced — recovery is simply "run it again",
 because the sync state lives inside each target's own atomic commit.
@@ -18,29 +24,16 @@ because the sync state lives inside each target's own atomic commit.
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 
 from repro.core.config import DatasetConfig, SyncConfig
-from repro.core.sources import ConversionSource, make_source
-from repro.core.targets import make_target
+from repro.core.executor import SyncExecutor, SyncResult
+from repro.core.metadata_cache import MetadataCache
+from repro.core.plan import SyncPlan, SyncPlanner
 from repro.core.telemetry import Telemetry
 from repro.lst.fs import LocalFS
 
-
-@dataclass
-class SyncResult:
-    dataset: str
-    target_format: str
-    mode: str                  # FULL | INCREMENTAL | SKIP | ERROR
-    commits_synced: int = 0
-    source_commit: str | None = None
-    elapsed_s: float = 0.0
-    error: str | None = None
-
-    @property
-    def ok(self) -> bool:
-        return self.error is None
+__all__ = ["SyncResult", "XTableSyncer", "run_sync"]
 
 
 @dataclass
@@ -48,75 +41,40 @@ class XTableSyncer:
     config: SyncConfig
     fs: object = None
     telemetry: Telemetry = field(default_factory=Telemetry)
+    max_workers: int | None = None        # None = auto; 1 = serial
+    cache: MetadataCache | None = None
 
     def __post_init__(self):
         self.fs = self.fs or LocalFS()
+        self.cache = self.cache or MetadataCache(self.fs)
 
     # ------------------------------------------------------------------ api
+    def plan(self) -> SyncPlan:
+        """Inspect sources/targets and decide, without executing anything."""
+        return SyncPlanner(self.config, self.fs, self.cache,
+                           self.telemetry).plan()
+
     def run(self) -> list[SyncResult]:
-        results = []
-        for ds in self.config.datasets:
-            results.extend(self.sync_dataset(ds))
-        return results
+        return self._execute(self.plan())
 
     def sync_dataset(self, ds: DatasetConfig) -> list[SyncResult]:
-        source = make_source(self.config.source_format, self.fs, ds.path)
-        head = source.current_commit()
-        results = []
-        for tf in self.config.target_formats:
-            t0 = time.perf_counter()
-            try:
-                r = self._sync_one(ds, source, head, tf)
-            except Exception as e:  # a failing target must not poison others
-                self.telemetry.bump("sync.errors")
-                self.telemetry.record(ds.name, tf, "error", str(e))
-                r = SyncResult(ds.name, tf, "ERROR", error=str(e))
-            r.elapsed_s = time.perf_counter() - t0
-            results.append(r)
-        return results
+        planner = SyncPlanner(self.config, self.fs, self.cache,
+                              self.telemetry)
+        units = planner.plan_dataset(ds)
+        return self._execute(SyncPlan(units, planner.writers))
 
     # ------------------------------------------------------------- internals
-    def _sync_one(self, ds: DatasetConfig, source: ConversionSource,
-                  head: str, target_format: str) -> SyncResult:
-        target = make_target(target_format, self.fs, ds.path)
-        token = target.get_sync_token()
-        src_fmt_on_target = target.get_sync_source_format()
-
-        if token == head and src_fmt_on_target == source.format:
-            self.telemetry.bump("sync.skipped")
-            self.telemetry.record(ds.name, target_format, "skip",
-                                  f"already at {head}")
-            return SyncResult(ds.name, target_format, "SKIP",
-                              source_commit=head)
-
-        use_incremental = (
-            self.config.incremental
-            and token is not None
-            and src_fmt_on_target == source.format
-            and source.has_commit(token))
-
-        if not use_incremental:
-            with self.telemetry.timed(ds.name, target_format, "full",
-                                      f"to {head}"):
-                snapshot = source.get_snapshot()   # head snapshot (cached read)
-                target.full_sync(snapshot)
-            self.telemetry.bump("sync.full")
-            return SyncResult(ds.name, target_format, "FULL", 1, head)
-
-        commits = source.get_commits_since(token)
-        n = 0
-        for c in commits:
-            change = source.get_changes(c)   # cached across targets
-            with self.telemetry.timed(ds.name, target_format, "incremental",
-                                      f"commit {c}"):
-                target.incremental_sync(change)
-            n += 1
-        self.telemetry.bump("sync.incremental", n)
-        return SyncResult(ds.name, target_format, "INCREMENTAL", n, head)
+    def _execute(self, plan: SyncPlan) -> list[SyncResult]:
+        executor = SyncExecutor(self.fs, self.cache, self.telemetry,
+                                self.max_workers)
+        return executor.execute(plan)
 
 
 def run_sync(config: SyncConfig, fs=None,
-             telemetry: Telemetry | None = None) -> list[SyncResult]:
+             telemetry: Telemetry | None = None, *,
+             max_workers: int | None = None,
+             cache: MetadataCache | None = None) -> list[SyncResult]:
     """One-shot entry point (the CLI / background-process body)."""
-    syncer = XTableSyncer(config, fs, telemetry or Telemetry())
+    syncer = XTableSyncer(config, fs, telemetry or Telemetry(),
+                          max_workers, cache)
     return syncer.run()

@@ -43,6 +43,23 @@ class _HandleTarget:
         self.base = base_path
         self.handle = (self.handle_cls.open(fs, base_path)
                        if self.handle_cls.exists(fs, base_path) else None)
+        self._snap = None       # cached target-side TableState (one replay)
+        self._schema = None     # tracked current schema across commits
+
+    # -- target-side metadata cache ----------------------------------------
+    # the target's own log is replayed at most once per writer instance;
+    # afterwards the schema is tracked through the commits this writer makes
+    # (it is the only writer of the unit), so an N-commit incremental unit
+    # costs one replay of the target log instead of N.
+    def _snapshot(self):
+        if self._snap is None:
+            self._snap = self.handle.snapshot()
+        return self._snap
+
+    def _current_schema(self):
+        if self._schema is None:
+            self._schema = self._snapshot().schema
+        return self._schema
 
     # -- sync-state bookkeeping (stored in target-native metadata) ---------
     def get_sync_token(self) -> str | None:
@@ -56,7 +73,7 @@ class _HandleTarget:
         return self._read_state().get(SOURCE_FMT_KEY)
 
     def _read_state(self) -> dict:
-        return self.handle.properties()
+        return self._snapshot().properties
 
     def _state_props(self, src: InternalSnapshot | TableChange, mode: str) -> dict:
         return {TOKEN_KEY: src.source_commit,
@@ -67,11 +84,13 @@ class _HandleTarget:
         if self.handle is None:
             self.handle = self.handle_cls.create(
                 self.fs, self.base, schema, partition_spec, {})
+            self._snap = None
+            self._schema = schema
 
     # -- FULL: reconcile target state to exactly the snapshot ---------------
     def full_sync(self, snapshot: InternalSnapshot) -> str:
         self._ensure_table(snapshot.schema, snapshot.partition_spec)
-        cur = self.handle.snapshot()
+        cur = self._snapshot()
         cur_paths = set(cur.files)
         want = {f.physical_path: f for f in snapshot.files}
         removes = sorted(cur_paths - set(want))
@@ -82,26 +101,33 @@ class _HandleTarget:
         carried = {k: v for k, v in snapshot.properties.items()
                    if not k.startswith("xtable.")}
         props = {**carried, **self._state_props(snapshot, "FULL")}
-        return self.handle.commit(
+        v = self.handle.commit(
             adds, removes, schema=schema,
             properties=props,
             operation="xtable-full-sync",
             extra_meta=props)
+        self._snap = None
+        self._schema = snapshot.schema
+        return v
 
     # -- INCREMENTAL: replay one source commit -------------------------------
     def incremental_sync(self, change: TableChange) -> str:
         if self.handle is None:
             raise RuntimeError("incremental sync on uninitialized target")
-        cur_schema = self.handle.snapshot().schema
+        cur_schema = self._current_schema()
         schema = None
         if change.schema is not None and not cur_schema.logical_eq(change.schema):
             schema = change.schema
         props = {**change.extra, **self._state_props(change, "INCREMENTAL")}
-        return self.handle.commit(
+        v = self.handle.commit(
             [f.to_meta() for f in change.adds], list(change.removes),
             schema=schema, properties=props,
             operation=f"xtable-incr-{change.operation}",
             extra_meta=props)
+        self._snap = None
+        if change.schema is not None:
+            self._schema = change.schema
+        return v
 
 
 class DeltaTarget(_HandleTarget):
@@ -112,6 +138,16 @@ class DeltaTarget(_HandleTarget):
 class IcebergTarget(_HandleTarget):
     handle_cls = IcebergTable
     format = "iceberg"
+
+    # iceberg keeps properties and schema in the metadata JSON; reading sync
+    # state must not materialize the file list from every manifest
+    def _read_state(self) -> dict:
+        return self.handle.properties()
+
+    def _current_schema(self):
+        if self._schema is None:
+            self._schema = self.handle.current_schema()
+        return self._schema
 
 
 class HudiTarget(_HandleTarget):

@@ -6,6 +6,7 @@ utility: every sync phase is recorded with wall time and work counters.
 
 from __future__ import annotations
 
+import threading
 import time
 from contextlib import contextmanager
 from dataclasses import dataclass, field
@@ -23,16 +24,22 @@ class Event:
 
 @dataclass
 class Telemetry:
+    """Thread-safe: sync units report from executor worker threads."""
+
     events: list = field(default_factory=list)
     counters: dict = field(default_factory=dict)
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False, compare=False)
 
     def bump(self, key: str, n: int = 1) -> None:
-        self.counters[key] = self.counters.get(key, 0) + n
+        with self._lock:
+            self.counters[key] = self.counters.get(key, 0) + n
 
     def record(self, dataset: str, target: str, phase: str, detail: str = "",
                elapsed_s: float = 0.0) -> None:
-        self.events.append(Event(time.time_ns() // 1_000_000, dataset, target,
-                                 phase, detail, elapsed_s))
+        with self._lock:
+            self.events.append(Event(time.time_ns() // 1_000_000, dataset,
+                                     target, phase, detail, elapsed_s))
 
     @contextmanager
     def timed(self, dataset: str, target: str, phase: str, detail: str = ""):

@@ -53,6 +53,10 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         if window:
             mask &= kpos >= (length - window)
         s = jnp.where(mask, s, NEG_INF)
+        # When S % bk != 0 the last block reads past the cache end; those
+        # lanes are masked (kpos >= S >= length) but the padded v rows hold
+        # garbage, and 0 * NaN = NaN would poison the accumulator.
+        v = jnp.where(mask[:, None], v, 0.0)
 
         m_prev = m_ref[0]
         m_new = jnp.maximum(m_prev, jnp.max(s))

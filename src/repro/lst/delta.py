@@ -21,7 +21,8 @@ import time
 
 from repro.lst.chunkfile import ColumnStats, DataFileMeta
 from repro.lst.fs import PutIfAbsentError, join
-from repro.lst.schema import Field, PartitionSpec, Schema, TableState
+from repro.lst.schema import (CommitEntry, Field, PartitionSpec, Schema,
+                              TableState)
 
 FORMAT = "delta"
 LOG_DIR = "_delta_log"
@@ -191,6 +192,54 @@ class DeltaTable:
                 op = a["commitInfo"].get("operation", "unknown")
                 info = a["commitInfo"]
         return adds, removes, op, info
+
+    def replay(self) -> tuple[TableState | None, list[CommitEntry]]:
+        """Single-pass scan of the whole log -> per-commit entries.
+
+        Returns ``(base, entries)``.  ``entries`` is one ``CommitEntry`` per
+        surviving log version, in order; folding their adds/removes on top of
+        ``base`` reproduces ``snapshot(v)`` for any listed version.  ``base``
+        is ``None`` in the normal case (fold from the empty table); it is the
+        checkpoint state when early log files were vacuumed behind a
+        checkpoint and per-commit history below it no longer exists.
+        """
+        versions = self._list_versions()
+        schema, pspec, props, ts = None, PartitionSpec(), {}, 0
+        base = None
+        start_after = -1
+        cp = self._last_checkpoint()
+        if cp is not None and (not versions or versions[0] > 0):
+            files: dict[str, DataFileMeta] = {}
+            for a in self._read_checkpoint(cp):
+                schema, pspec, props, files, ts = _apply(a, schema, pspec,
+                                                         props, files, ts)
+            base = TableState(FORMAT, str(cp), ts, schema, pspec, files, props)
+            start_after = cp
+        entries = []
+        for v in versions:
+            if v <= start_after:
+                continue
+            adds, removes, op, info = [], [], "unknown", {}
+            for a in self._read_actions(v):
+                if "metaData" in a:
+                    m = a["metaData"]
+                    schema = schema_from_delta(m["schemaString"])
+                    pspec = PartitionSpec(m.get("partitionColumns", []))
+                    props = dict(m.get("configuration", {}))
+                elif "add" in a:
+                    adds.append(_file_from_add(a["add"]))
+                    ts = max(ts, a["add"].get("modificationTime", 0))
+                elif "remove" in a:
+                    removes.append(a["remove"]["path"])
+                    ts = max(ts, a["remove"].get("deletionTimestamp", 0))
+                elif "commitInfo" in a:
+                    op = a["commitInfo"].get("operation", "unknown")
+                    info = a["commitInfo"]
+                    ts = max(ts, a["commitInfo"].get("timestamp", 0))
+            entries.append(CommitEntry(str(v), ts, op, tuple(adds),
+                                       tuple(removes), schema, pspec,
+                                       dict(props), info))
+        return base, entries
 
     def properties(self) -> dict:
         return self.snapshot().properties

@@ -24,7 +24,8 @@ import time
 
 from repro.lst.chunkfile import ColumnStats, DataFileMeta
 from repro.lst.fs import PutIfAbsentError, join
-from repro.lst.schema import Field, PartitionSpec, Schema, TableState
+from repro.lst.schema import (CommitEntry, Field, PartitionSpec, Schema,
+                              TableState)
 
 FORMAT = "hudi"
 HOODIE_DIR = ".hoodie"
@@ -213,6 +214,38 @@ class HudiTable:
                 return adds, removes, payload.get("operationType", "unknown"), \
                     dict(payload.get("extraMetadata", {}))
         raise KeyError(f"instant {version} not found")
+
+    def replay(self) -> tuple[TableState, list[CommitEntry]]:
+        """Single-pass scan of the timeline -> per-instant entries.
+
+        Each completed instant payload is read exactly once; the base state
+        is the empty pre-first-instant table (version "0").
+        """
+        props = self._read_props()
+        schema = schema_from_avro(props["hoodie.table.create.schema"])
+        pf = props.get("hoodie.table.partition.fields", "")
+        spec = PartitionSpec([c for c in pf.split(",") if c])
+        user_props = {k: v for k, v in props.items()
+                      if not k.startswith("hoodie.")}
+        base = TableState(FORMAT, "0", 0, schema, spec, {}, user_props)
+        ts_ms = 0
+        entries = []
+        for ts, action in self._timeline():
+            payload = self._instant_payload(ts, action)
+            adds = [_file_from_stat(w) for stats in
+                    payload.get("partitionToWriteStats", {}).values()
+                    for w in stats]
+            removes = [p for paths in
+                       payload.get("partitionToReplacedFilePaths", {}).values()
+                       for p in paths]
+            if "schema" in payload.get("extraMetadata", {}):
+                schema = schema_from_avro(payload["extraMetadata"]["schema"])
+            ts_ms = max(ts_ms, payload.get("timestampMs", 0))
+            entries.append(CommitEntry(
+                ts, ts_ms, payload.get("operationType", "unknown"),
+                tuple(adds), tuple(removes), schema, spec, dict(user_props),
+                dict(payload.get("extraMetadata", {}))))
+        return base, entries
 
     def properties(self) -> dict:
         props = self._read_props()

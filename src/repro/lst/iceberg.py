@@ -23,8 +23,8 @@ import uuid
 
 from repro.lst.chunkfile import ColumnStats, DataFileMeta
 from repro.lst.fs import PutIfAbsentError, join
-from repro.lst.schema import (Field, PartitionField, PartitionSpec, Schema,
-                              TableState)
+from repro.lst.schema import (CommitEntry, Field, PartitionField,
+                              PartitionSpec, Schema, TableState)
 
 FORMAT = "iceberg"
 META_DIR = "metadata"
@@ -240,9 +240,56 @@ class IcebergTable:
         return adds, removes, snap["summary"].get("operation", "unknown"), \
             dict(snap["summary"])
 
+    def replay(self) -> tuple[TableState, list[CommitEntry]]:
+        """Single-pass scan of the snapshot chain -> per-commit entries.
+
+        Manifest files are read once each even though manifest *reuse* makes
+        them appear in many snapshots' manifest lists, so the whole history
+        costs one read per metadata object, not one per (snapshot, manifest).
+        The base state is the empty pre-first-snapshot table (version "-1").
+        """
+        _, meta = self._read_metadata()
+        cur_schema = self._schema_of(meta, meta["current-schema-id"])
+        spec = spec_from_ice(meta["partition-specs"][meta["default-spec-id"]],
+                             cur_schema)
+        props = dict(meta["properties"])
+        base = TableState(FORMAT, "-1", meta["last-updated-ms"], cur_schema,
+                          spec, {}, props)
+        manifest_memo: dict[str, list[dict]] = {}
+
+        def read_manifest(path: str) -> list[dict]:
+            if path not in manifest_memo:
+                manifest_memo[path] = self._read_manifest(path)
+            return manifest_memo[path]
+
+        entries = []
+        for snap in sorted(meta["snapshots"], key=lambda s: s["sequence-number"]):
+            sid = snap["snapshot-id"]
+            adds, removes = [], []
+            for m in self._read_manifest_list(snap["manifest-list"]):
+                for e in read_manifest(m["manifest-path"]):
+                    if e["snapshot-id"] != sid:
+                        continue
+                    if e["status"] == ADDED:
+                        adds.append(_file_from_entry(e))
+                    elif e["status"] == DELETED:
+                        removes.append(e["data-file"]["file-path"])
+            schema = self._schema_of(meta, snap.get("schema-id",
+                                                    meta["current-schema-id"]))
+            entries.append(CommitEntry(
+                str(sid), snap["timestamp-ms"],
+                snap["summary"].get("operation", "unknown"), tuple(adds),
+                tuple(removes), schema, spec, props, dict(snap["summary"])))
+        return base, entries
+
     def properties(self) -> dict:
         _, meta = self._read_metadata()
         return dict(meta["properties"])
+
+    def current_schema(self) -> Schema:
+        """Schema from the metadata JSON alone (no manifest reads)."""
+        _, meta = self._read_metadata()
+        return self._schema_of(meta, meta["current-schema-id"])
 
     # --------------------------------------------------------------- commits
     def commit(self, adds: list[DataFileMeta] = (), removes: list[str] = (), *,

@@ -99,6 +99,27 @@ class PartitionSpec:
                         for f in self.fields)
 
 
+@dataclass(frozen=True)
+class CommitEntry:
+    """One commit of an LST log, as produced by a single-pass ``replay()``.
+
+    The per-format handles emit these in commit order so the metadata cache
+    can serve every ``snapshot(commit)`` / ``changes(commit)`` question from
+    ONE scan of the log instead of re-replaying per commit.  ``schema`` /
+    ``partition_spec`` / ``properties`` / ``timestamp_ms`` are *as of* this
+    commit (i.e. what ``snapshot(version)`` would report).
+    """
+    version: str
+    timestamp_ms: int
+    operation: str
+    adds: tuple                       # tuple[DataFileMeta]
+    removes: tuple                    # tuple[str] — removed file paths
+    schema: Schema
+    partition_spec: PartitionSpec
+    properties: dict
+    info: dict                        # commit user-metadata (format-native)
+
+
 @dataclass
 class TableState:
     """A point-in-time logical snapshot of an LST (any format)."""

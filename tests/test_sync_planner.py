@@ -1,0 +1,171 @@
+"""Planner unit tests: FULL / INCREMENTAL / SKIP decisions and exact commit
+ranges, asserted WITHOUT executing any sync (the whole point of splitting
+plan from execute)."""
+
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import SyncConfig, XTableSyncer, run_sync
+from repro.core.plan import ERROR, FULL, INCREMENTAL, SKIP, SyncPlanner
+from repro.core.targets import SOURCE_FMT_KEY, TOKEN_KEY
+from repro.lst import LakeTable, LocalFS
+from repro.lst.fs import join
+from repro.lst.iceberg import IcebergTable
+from repro.lst.schema import Field, PartitionSpec, Schema
+
+SCHEMA = Schema([Field("k", "int64"), Field("part", "string")])
+
+
+def _mk_delta(fs, n_commits=3):
+    base = tempfile.mkdtemp() + "/t"
+    t = LakeTable.create(fs, base, SCHEMA, "delta", PartitionSpec(["part"]))
+    for i in range(n_commits):
+        t.append({"k": np.array([i], np.int64), "part": np.array(["p0"])})
+    return base, t
+
+
+def _cfg(base, src="DELTA", targets=("ICEBERG", "HUDI")):
+    return SyncConfig.from_dict({
+        "sourceFormat": src, "targetFormats": list(targets),
+        "datasets": [{"tableBasePath": base}]})
+
+
+def test_fresh_targets_plan_full_without_executing(fs):
+    base, t = _mk_delta(fs)
+    head = t.handle.current_version()
+    plan = SyncPlanner(_cfg(base), fs).plan()
+    assert [u.mode for u in plan.units] == [FULL, FULL]
+    assert all(u.source_head == head for u in plan.units)
+    assert [u.target_format for u in plan.units] == ["iceberg", "hudi"]
+    # planning is read-only: no target metadata came into existence
+    assert not fs.list_dir(join(base, "metadata"))
+    assert not fs.exists(join(base, ".hoodie", "hoodie.properties"))
+    assert plan.summary() == {FULL: 2}
+    assert len(plan.pending()) == 2
+
+
+def test_synced_targets_plan_skip(fs):
+    base, _ = _mk_delta(fs)
+    run_sync(_cfg(base), fs)
+    plan = SyncPlanner(_cfg(base), fs).plan()
+    assert [u.mode for u in plan.units] == [SKIP, SKIP]
+    assert plan.pending() == []
+
+
+def test_backlog_plans_incremental_with_exact_commit_range(fs):
+    base, t = _mk_delta(fs, n_commits=2)          # versions 0..2
+    run_sync(_cfg(base), fs)
+    new = [t.append({"k": np.array([10 + i], np.int64),
+                     "part": np.array(["p0"])}) for i in range(3)]
+    plan = SyncPlanner(_cfg(base), fs).plan()
+    for u in plan.units:
+        assert u.mode == INCREMENTAL
+        assert list(u.commits) == new              # exactly the new commits
+        assert u.source_head == new[-1]
+
+
+def test_diverged_token_plans_full(fs):
+    """A target whose token never existed in the source history -> FULL."""
+    base, _ = _mk_delta(fs)
+    run_sync(_cfg(base, targets=("ICEBERG",)), fs)
+    IcebergTable.open(fs, base).commit(
+        [], [], properties={TOKEN_KEY: "999999", SOURCE_FMT_KEY: "delta"})
+    plan = SyncPlanner(_cfg(base, targets=("ICEBERG",)), fs).plan()
+    (u,) = plan.units
+    assert u.mode == FULL
+    assert "not in source history" in u.reason
+
+
+def test_source_format_change_plans_full(fs):
+    """Target synced from delta, then planned against an iceberg source at
+    the same path: recorded source format no longer matches -> FULL."""
+    base, _ = _mk_delta(fs)
+    run_sync(_cfg(base, targets=("ICEBERG", "HUDI")), fs)
+    plan = SyncPlanner(_cfg(base, src="ICEBERG", targets=("HUDI",)), fs).plan()
+    (u,) = plan.units
+    assert u.mode == FULL
+    assert "source format changed" in u.reason
+
+
+def test_vacuumed_history_plans_full(fs):
+    """Delta log truncated behind a checkpoint: token vanishes from the
+    source history while the snapshot stays reachable -> FULL fallback."""
+    base = tempfile.mkdtemp() + "/t"
+    t = LakeTable.create(fs, base, SCHEMA, "delta", PartitionSpec(["part"]))
+    for i in range(10):                           # v1..v10; checkpoint at v10
+        t.append({"k": np.array([i], np.int64),
+                  "part": np.array([f"p{i % 2}"])})
+    cfg = _cfg(base, targets=("HUDI",))
+    run_sync(cfg, fs)                             # token = "10"
+    t.append({"k": np.array([100], np.int64), "part": np.array(["p0"])})
+    for v in range(0, 11):
+        fs.delete(join(base, "_delta_log", f"{v:020d}.json"))
+    plan = SyncPlanner(cfg, fs).plan()
+    assert plan.units[0].mode == FULL
+    # and executing that plan converges the target onto the full state
+    res = run_sync(cfg, fs)
+    assert res[0].mode == "FULL" and res[0].ok
+    got = sorted(LakeTable.open(fs, base, "hudi").read_all()["k"].tolist())
+    assert got == sorted(list(range(10)) + [100])
+
+
+def test_incremental_disabled_plans_full(fs):
+    base, t = _mk_delta(fs)
+    run_sync(_cfg(base, targets=("ICEBERG",)), fs)
+    t.append({"k": np.array([9], np.int64), "part": np.array(["p0"])})
+    cfg = SyncConfig.from_dict({
+        "sourceFormat": "DELTA", "targetFormats": ["ICEBERG"],
+        "datasets": [{"tableBasePath": base}], "incremental": False})
+    (u,) = SyncPlanner(cfg, fs).plan().units
+    assert u.mode == FULL and "incremental disabled" in u.reason
+
+
+def test_broken_target_isolated_as_error_unit(fs, monkeypatch):
+    """A target whose state read blows up plans as ERROR; others unaffected."""
+    from repro.core.targets import HudiTarget
+    base, _ = _mk_delta(fs)
+    run_sync(_cfg(base), fs)
+
+    def boom(self):
+        raise RuntimeError("corrupt target metadata")
+
+    monkeypatch.setattr(HudiTarget, "get_sync_token", boom)
+    plan = SyncPlanner(_cfg(base), fs).plan()
+    by_fmt = {u.target_format: u for u in plan.units}
+    assert by_fmt["iceberg"].mode == SKIP
+    assert by_fmt["hudi"].mode == ERROR
+    assert "corrupt target metadata" in by_fmt["hudi"].reason
+
+
+def test_crash_between_targets_recovers_via_replan(fs, monkeypatch):
+    """First target succeeds, second 'crashes'; rerun converges both
+    (the seed's recovery contract, preserved across the refactor)."""
+    from repro.core.targets import HudiTarget
+    base, _ = _mk_delta(fs)
+    cfg = _cfg(base, targets=("ICEBERG", "HUDI"))
+    orig = HudiTarget.full_sync
+
+    def boom(self, snapshot):
+        raise RuntimeError("simulated crash")
+
+    monkeypatch.setattr(HudiTarget, "full_sync", boom)
+    res = run_sync(cfg, fs)
+    assert res[0].ok and not res[1].ok            # plan-order results
+    monkeypatch.setattr(HudiTarget, "full_sync", orig)
+    res2 = run_sync(cfg, fs)
+    by_fmt = {r.target_format: r for r in res2}
+    assert by_fmt["iceberg"].mode == "SKIP"
+    assert by_fmt["hudi"].ok and by_fmt["hudi"].mode == "FULL"
+    assert sorted(LakeTable.open(fs, base, "hudi").read_all()["k"].tolist()) \
+        == [0, 1, 2]
+
+
+def test_syncer_plan_then_run_skip_idempotent(fs):
+    base, _ = _mk_delta(fs)
+    syncer = XTableSyncer(_cfg(base), fs)
+    r1 = syncer.run()
+    assert all(r.ok and r.mode == "FULL" for r in r1)
+    r2 = XTableSyncer(_cfg(base), fs).run()
+    assert all(r.mode == "SKIP" for r in r2)
