@@ -1,34 +1,62 @@
 """Benchmark harness: ``PYTHONPATH=src python -m benchmarks.run``.
 
 Prints ``name,us_per_call,derived`` CSV — one family per paper claim
-(translation overhead / incrementality / omni-direction / scaling) plus the
-compute-layer micro-benches. The roofline table (per arch x shape x mesh)
-is produced separately by ``repro.launch.dryrun`` + ``repro.launch.roofline``
-from compiled artifacts.
+(translation overhead / incrementality / omni-direction / scaling / backlog
+drain) plus the compute-layer micro-benches — and writes the same rows as
+machine-readable ``BENCH_xtable.json`` (``{"rows": [{name, us, derived}]}``)
+so the perf trajectory can be tracked across PRs.
+
+``--filter SUBSTR`` runs only the benchmark functions whose name contains
+SUBSTR (e.g. ``--filter drain``).  ``--out PATH`` moves the JSON artifact.
+The roofline table (per arch x shape x mesh) is produced separately by
+``repro.launch.dryrun`` + ``repro.launch.roofline`` from compiled artifacts.
 """
 
+import argparse
+import json
 import sys
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--filter", default="",
+                    help="only run benchmark functions whose name contains "
+                         "this substring")
+    ap.add_argument("--out", default=None,
+                    help="where to write the machine-readable results "
+                         "(default: BENCH_xtable.json, or "
+                         "BENCH_xtable.partial.json for a --filter run so a "
+                         "partial sweep never clobbers the full record)")
+    args = ap.parse_args(argv)
+    if args.out is None:
+        args.out = ("BENCH_xtable.partial.json" if args.filter
+                    else "BENCH_xtable.json")
+
     from benchmarks import bench_kernels, bench_xtable
 
     rows = []
 
     def report(name: str, us: float, derived: str = "") -> None:
-        rows.append((name, us, derived))
+        rows.append({"name": name, "us": round(us, 1), "derived": derived})
         print(f"{name},{us:.1f},{derived}", flush=True)
 
     print("name,us_per_call,derived")
+    ran = 0
     for mod in (bench_xtable, bench_kernels):
         for bench in mod.ALL:
+            if args.filter and args.filter not in bench.__name__:
+                continue
+            ran += 1
             try:
                 bench(report)
             except Exception as e:  # keep the harness honest but resilient
                 print(f"{mod.__name__}.{bench.__name__},FAIL,{e}",
                       file=sys.stderr)
                 raise
-    print(f"# {len(rows)} benchmarks ok", file=sys.stderr)
+    with open(args.out, "w") as f:
+        json.dump({"rows": rows}, f, indent=1)
+    print(f"# {ran} benchmarks ok ({len(rows)} rows) -> {args.out}",
+          file=sys.stderr)
 
 
 if __name__ == "__main__":

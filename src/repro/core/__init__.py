@@ -10,7 +10,7 @@ facade with persisted state, caching, and telemetry).
 from repro.core.config import DatasetConfig, SyncConfig
 from repro.core.executor import SyncExecutor
 from repro.core.ir import (InternalDataFile, InternalSnapshot, InternalTable,
-                           TableChange)
+                           TableChange, fold_changes)
 from repro.core.metadata_cache import MetadataCache, TableMetadataIndex
 from repro.core.plan import SyncPlan, SyncPlanner, SyncUnit
 from repro.core.sources import make_source
@@ -19,7 +19,7 @@ from repro.core.targets import make_target
 from repro.core.telemetry import Telemetry
 
 __all__ = ["DatasetConfig", "SyncConfig", "InternalDataFile",
-           "InternalSnapshot", "InternalTable", "TableChange", "make_source",
-           "make_target", "run_sync", "SyncResult", "XTableSyncer",
-           "Telemetry", "SyncPlan", "SyncPlanner", "SyncUnit", "SyncExecutor",
-           "MetadataCache", "TableMetadataIndex"]
+           "InternalSnapshot", "InternalTable", "TableChange", "fold_changes",
+           "make_source", "make_target", "run_sync", "SyncResult",
+           "XTableSyncer", "Telemetry", "SyncPlan", "SyncPlanner", "SyncUnit",
+           "SyncExecutor", "MetadataCache", "TableMetadataIndex"]

@@ -10,7 +10,16 @@
       -
         tableBasePath: abfs://container@ac.dfs.core.windows.net/sales
 
-Accepts YAML text, a file path, or a plain dict.
+Accepts YAML text, a file path, or a plain dict.  Optional knobs:
+
+* ``incremental`` (default true) — prefer incremental, fall back to full.
+* ``transactionalTargets`` (default true) — drain each sync unit inside one
+  target transaction (target metadata parsed once, commits flushed with no
+  re-reads); false restores the seed per-commit path.
+* ``coalesceIncremental`` (default false) — fold the whole backlog into a
+  single net target commit (freshness over 1:1 history fidelity).
+* ``maxCommitsPerSync`` (default unlimited) — cap the commits one run
+  applies; the next run continues from the recorded sync token.
 """
 
 from __future__ import annotations
@@ -42,6 +51,16 @@ class SyncConfig:
     target_formats: tuple
     datasets: tuple
     incremental: bool = True      # prefer incremental, fall back to full
+    # drain an N-commit backlog inside ONE target transaction (state read
+    # once, every commit flushed without a re-read); off = seed per-commit
+    # path, kept for benchmarking the difference
+    transactional_targets: bool = True
+    # fold the whole backlog into a single net target commit (freshness over
+    # 1:1 history fidelity; per-commit lineage kept in the commit metadata)
+    coalesce_incremental: bool = False
+    # cap how many backlog commits one sync run applies (None = all); the
+    # target advances to the cap and the next run continues from there
+    max_commits_per_sync: int | None = None
 
     def __post_init__(self):
         for f in (self.source_format, *self.target_formats):
@@ -49,17 +68,24 @@ class SyncConfig:
                 raise ValueError(f"unknown format {f!r}; known: {KNOWN_FORMATS}")
         if self.source_format in self.target_formats:
             raise ValueError("source format cannot also be a target")
+        if self.max_commits_per_sync is not None \
+                and self.max_commits_per_sync < 1:
+            raise ValueError("maxCommitsPerSync must be >= 1")
 
     @staticmethod
     def from_dict(d: dict) -> "SyncConfig":
         datasets = tuple(
             DatasetConfig(x["tableBasePath"], x.get("tableName"))
             for x in d.get("datasets", []))
+        mcps = d.get("maxCommitsPerSync")
         return SyncConfig(
             source_format=d["sourceFormat"].lower(),
             target_formats=tuple(t.lower() for t in d["targetFormats"]),
             datasets=datasets,
-            incremental=bool(d.get("incremental", True)))
+            incremental=bool(d.get("incremental", True)),
+            transactional_targets=bool(d.get("transactionalTargets", True)),
+            coalesce_incremental=bool(d.get("coalesceIncremental", False)),
+            max_commits_per_sync=int(mcps) if mcps is not None else None)
 
     @staticmethod
     def from_yaml(text: str) -> "SyncConfig":

@@ -19,8 +19,10 @@ from __future__ import annotations
 
 import time
 from concurrent.futures import ThreadPoolExecutor
+from contextlib import nullcontext
 from dataclasses import dataclass
 
+from repro.core.ir import fold_changes
 from repro.core.metadata_cache import MetadataCache
 from repro.core.plan import (ERROR, FULL, INCREMENTAL, SKIP, SyncPlan,
                              SyncUnit)
@@ -36,10 +38,12 @@ class SyncResult:
     dataset: str
     target_format: str
     mode: str                  # FULL | INCREMENTAL | SKIP | ERROR
-    commits_synced: int = 0
-    source_commit: str | None = None
+    commits_synced: int = 0    # SOURCE commits this run advanced the target by
+    source_commit: str | None = None   # last source commit applied
     elapsed_s: float = 0.0
     error: str | None = None
+    target_commits: int = 0    # target commits written (< commits_synced when
+                               # the backlog was coalesced)
 
     @property
     def ok(self) -> bool:
@@ -110,22 +114,37 @@ class SyncExecutor:
         target = self._writers.get((unit.base_path, unit.target_format)) \
             or make_target(unit.target_format, self.fs, unit.base_path)
 
+        # transactional drain: the target's metadata is parsed once at the
+        # first commit and threaded through the rest in memory, so an
+        # N-commit unit costs O(N) writes and O(1) reads in table history
+        txn = target.transaction() if (unit.transactional and
+                                       hasattr(target, "transaction")) \
+            else nullcontext()
+
         if unit.mode == FULL:
-            with self.telemetry.timed(unit.dataset, unit.target_format,
-                                      "full", f"to {unit.source_head}"):
+            with txn, self.telemetry.timed(unit.dataset, unit.target_format,
+                                           "full", f"to {unit.source_head}"):
                 snapshot = source.get_snapshot(unit.source_head)
                 target.full_sync(snapshot)
             self.telemetry.bump("sync.full")
             return SyncResult(unit.dataset, unit.target_format, FULL,
-                              1, unit.source_head)
+                              1, unit.source_head, target_commits=1)
 
+        changes = [source.get_changes(c) for c in unit.commits]
+        if unit.coalesce and len(changes) > 1:
+            changes = [fold_changes(changes)]
         n = 0
-        for c in unit.commits:
-            change = source.get_changes(c)   # served from the shared index
-            with self.telemetry.timed(unit.dataset, unit.target_format,
-                                      "incremental", f"commit {c}"):
-                target.incremental_sync(change)
-            n += 1
+        with txn:
+            for change in changes:
+                label = (f"commits {change.lineage[0]}..{change.source_commit}"
+                         if change.lineage else
+                         f"commit {change.source_commit}")
+                with self.telemetry.timed(unit.dataset, unit.target_format,
+                                          "incremental", label):
+                    target.incremental_sync(change)
+                n += 1
         self.telemetry.bump("sync.incremental", n)
+        last = unit.commits[-1] if unit.commits else unit.source_head
         return SyncResult(unit.dataset, unit.target_format,
-                          INCREMENTAL, n, unit.source_head)
+                          INCREMENTAL, len(unit.commits), last,
+                          target_commits=n)

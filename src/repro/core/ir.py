@@ -63,7 +63,13 @@ class InternalSnapshot:
 
 @dataclass(frozen=True)
 class TableChange:
-    """One source commit's delta (drives INCREMENTAL sync)."""
+    """One source commit's delta (drives INCREMENTAL sync).
+
+    A coalesced change (see :func:`fold_changes`) represents a whole commit
+    RANGE folded to its net effect; ``lineage`` then lists the folded source
+    commits in order, and target writers persist it in the target commit's
+    extra metadata so per-commit provenance survives the fold.
+    """
     source_format: str
     source_commit: str
     timestamp_ms: int
@@ -72,6 +78,46 @@ class TableChange:
     removes: tuple                # tuple[str] — physical paths
     schema: InternalSchema | None = None   # set when the commit evolved schema
     extra: dict = field(default_factory=dict)  # source commit user-metadata
+    lineage: tuple = ()           # source commits folded into this change
+
+
+def fold_changes(changes: list) -> TableChange:
+    """Fold an ordered commit range into ONE net TableChange.
+
+    Dict-fold of the per-commit adds/removes: a file added then removed
+    inside the range disappears entirely; a file removed then re-added
+    becomes a replace (listed in both removes and adds — targets apply
+    removes before adds within a commit); everything else carries through.
+    The result advances a target from just-before ``changes[0]`` to exactly
+    ``changes[-1]`` in a single target commit.
+    """
+    if not changes:
+        raise ValueError("cannot fold an empty change list")
+    if len(changes) == 1:
+        return changes[0]
+    net_adds: dict[str, InternalDataFile] = {}
+    net_removes: list[str] = []
+    seen_removes: set[str] = set()
+    extra: dict = {}
+    for ch in changes:
+        for p in ch.removes:
+            if p in net_adds:          # born and died within the range
+                del net_adds[p]
+            elif p not in seen_removes:
+                seen_removes.add(p)
+                net_removes.append(p)
+        for f in ch.adds:
+            net_adds[f.physical_path] = f
+        extra.update(ch.extra)
+    last = changes[-1]
+    schema = next((c.schema for c in reversed(changes)
+                   if c.schema is not None), None)
+    return TableChange(
+        source_format=last.source_format, source_commit=last.source_commit,
+        timestamp_ms=last.timestamp_ms, operation="coalesced",
+        adds=tuple(net_adds.values()), removes=tuple(net_removes),
+        schema=schema, extra=extra,
+        lineage=tuple(c.source_commit for c in changes))
 
 
 @dataclass(frozen=True)

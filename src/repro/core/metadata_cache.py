@@ -35,7 +35,8 @@ class TableMetadataIndex:
 
     def __init__(self, handle):
         self.handle = handle
-        self.replays = 0
+        self.replays = 0          # full log replays
+        self.tail_replays = 0     # tail-only (since=...) refreshes
         self._lock = threading.RLock()
         self._built_head: str | None = None
         self._base: TableState | None = None
@@ -61,10 +62,34 @@ class TableMetadataIndex:
             return self
 
     def refresh(self) -> "TableMetadataIndex":
-        """Rebuild if (and only if) the table head moved since the build."""
+        """Refresh if (and only if) the table head moved since the build.
+
+        A moved head replays only the NEW tail commits
+        (``handle.replay(since=built_head, seed=...)``) and appends them to
+        the index — O(new commits), not O(history).  A full rebuild happens
+        only when there is no index yet, or when the anchor commit vanished
+        from the log (vacuum / divergent rewrite).
+        """
         with self._lock:
-            if self._built_head != self.head():
+            head = self.head()
+            if self._built_head == head:
+                return self
+            if self._built_head is None:
                 self._rebuild()
+                return self
+            try:
+                _, entries = self.handle.replay(
+                    since=self._built_head,
+                    seed=self._entries.get(self._built_head))
+            except (KeyError, FileNotFoundError, ValueError):
+                self._rebuild()
+                return self
+            self.tail_replays += 1
+            for e in entries:
+                if e.version not in self._entries:
+                    self._order.append(e.version)
+                self._entries[e.version] = e
+            self._built_head = head
             return self
 
     def _rebuild(self) -> None:

@@ -42,6 +42,8 @@ class SyncUnit:
     source_head: str | None = None
     commits: tuple = ()             # commit range for INCREMENTAL, in order
     reason: str = ""
+    transactional: bool = True      # drain inside one target transaction
+    coalesce: bool = False          # fold the range into one net commit
 
     @property
     def actionable(self) -> bool:
@@ -117,6 +119,7 @@ class SyncPlanner:
         token = target.get_sync_token()
         src_fmt_on_target = target.get_sync_source_format()
         self.writers[(ds.path, target_format)] = target
+        txn = self.config.transactional_targets
 
         if token == head and src_fmt_on_target == source.format:
             return SyncUnit(ds.name, ds.path, source.format, target_format,
@@ -140,9 +143,16 @@ class SyncPlanner:
             else:
                 reason = f"token {token} not in source history"
             return SyncUnit(ds.name, ds.path, source.format, target_format,
-                            FULL, source_head=head, reason=reason)
+                            FULL, source_head=head, reason=reason,
+                            transactional=txn)
 
         commits = tuple(source.get_commits_since(token))
+        reason = f"{len(commits)} commits behind"
+        cap = self.config.max_commits_per_sync
+        if cap is not None and len(commits) > cap:
+            commits = commits[:cap]
+            reason += f", capped at {cap}"
         return SyncUnit(ds.name, ds.path, source.format, target_format,
                         INCREMENTAL, source_head=head, commits=commits,
-                        reason=f"{len(commits)} commits behind")
+                        reason=reason, transactional=txn,
+                        coalesce=self.config.coalesce_incremental)

@@ -12,9 +12,14 @@ and ``executor.py``):
    ranges — decisions, testable without executing anything.
 2. :class:`~repro.core.metadata_cache.MetadataCache` replays each source log
    ONCE and serves every per-commit snapshot/change from that pass, shared
-   by all targets of a dataset.
+   by all targets of a dataset; a moved head refreshes the index by
+   replaying only the new tail commits.
 3. :class:`~repro.core.executor.SyncExecutor` runs independent units on a
-   thread pool with per-unit telemetry and fail isolation.
+   thread pool with per-unit telemetry and fail isolation.  Each unit
+   drains inside one target *transaction* (target metadata parsed once,
+   every commit flushed put-if-absent with no re-read), and the
+   ``coalesceIncremental`` / ``maxCommitsPerSync`` config knobs trade 1:1
+   history fidelity for a single net commit / bounded batch per run.
 
 Both paths stay idempotent: rerunning a sync that is already current is a
 no-op (``skip``), and a crash between two targets leaves each target either
@@ -24,7 +29,7 @@ because the sync state lives inside each target's own atomic commit.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 from repro.core.config import DatasetConfig, SyncConfig
 from repro.core.executor import SyncExecutor, SyncResult
@@ -43,10 +48,19 @@ class XTableSyncer:
     telemetry: Telemetry = field(default_factory=Telemetry)
     max_workers: int | None = None        # None = auto; 1 = serial
     cache: MetadataCache | None = None
+    coalesce: bool | None = None          # None = take from config
+    max_commits_per_sync: int | None = None
 
     def __post_init__(self):
         self.fs = self.fs or LocalFS()
         self.cache = self.cache or MetadataCache(self.fs)
+        overrides = {}
+        if self.coalesce is not None:
+            overrides["coalesce_incremental"] = self.coalesce
+        if self.max_commits_per_sync is not None:
+            overrides["max_commits_per_sync"] = self.max_commits_per_sync
+        if overrides:
+            self.config = replace(self.config, **overrides)
 
     # ------------------------------------------------------------------ api
     def plan(self) -> SyncPlan:
@@ -73,8 +87,14 @@ class XTableSyncer:
 def run_sync(config: SyncConfig, fs=None,
              telemetry: Telemetry | None = None, *,
              max_workers: int | None = None,
-             cache: MetadataCache | None = None) -> list[SyncResult]:
-    """One-shot entry point (the CLI / background-process body)."""
+             cache: MetadataCache | None = None,
+             coalesce: bool | None = None,
+             max_commits_per_sync: int | None = None) -> list[SyncResult]:
+    """One-shot entry point (the CLI / background-process body).
+
+    ``coalesce`` / ``max_commits_per_sync`` override the corresponding
+    config knobs for this run only.
+    """
     syncer = XTableSyncer(config, fs, telemetry or Telemetry(),
-                          max_workers, cache)
+                          max_workers, cache, coalesce, max_commits_per_sync)
     return syncer.run()

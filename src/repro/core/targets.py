@@ -14,16 +14,18 @@ alone — there is no side database to lose.
 from __future__ import annotations
 
 import json
+from contextlib import contextmanager
 from typing import Protocol
 
 from repro.core.ir import InternalSnapshot, TableChange
 from repro.lst.delta import DeltaTable
-from repro.lst.hudi import HudiTable
+from repro.lst.hudi import HudiTable, schema_from_avro
 from repro.lst.iceberg import IcebergTable
 
 TOKEN_KEY = "xtable.lastSyncedSourceCommit"
 SOURCE_FMT_KEY = "xtable.sourceFormat"
 MODE_KEY = "xtable.lastSyncMode"
+LINEAGE_KEY = "xtable.coalescedCommits"
 
 
 class ConversionTarget(Protocol):
@@ -45,6 +47,9 @@ class _HandleTarget:
                        if self.handle_cls.exists(fs, base_path) else None)
         self._snap = None       # cached target-side TableState (one replay)
         self._schema = None     # tracked current schema across commits
+        self._state = None      # cached sync-state dict (one tail read)
+        self._txn = None        # active handle transaction (None = direct)
+        self._in_txn = False
 
     # -- target-side metadata cache ----------------------------------------
     # the target's own log is replayed at most once per writer instance;
@@ -61,6 +66,30 @@ class _HandleTarget:
             self._schema = self._snapshot().schema
         return self._schema
 
+    # -- transactions -------------------------------------------------------
+    # inside a transaction the handle's parsed metadata (version counter /
+    # metadata dict + manifest list / timeline schema + properties) is read
+    # once and threaded through every commit in memory; each commit is still
+    # flushed immediately as an atomic put-if-absent write, so a crash
+    # mid-unit leaves a valid prefix and recovery stays "run it again".
+    @contextmanager
+    def transaction(self):
+        self._in_txn = True
+        try:
+            yield self
+        finally:
+            if self._txn is not None:
+                self._txn.close()
+                self._txn = None
+            self._in_txn = False
+
+    def _commit(self, adds, removes, **kw) -> str:
+        if self._in_txn:
+            if self._txn is None:   # lazy: FULL sync may create the table
+                self._txn = self.handle.transaction(schema=self._schema)
+            return self._txn.commit(adds, removes, **kw)
+        return self.handle.commit(adds, removes, **kw)
+
     # -- sync-state bookkeeping (stored in target-native metadata) ---------
     def get_sync_token(self) -> str | None:
         if self.handle is None:
@@ -73,6 +102,11 @@ class _HandleTarget:
         return self._read_state().get(SOURCE_FMT_KEY)
 
     def _read_state(self) -> dict:
+        if self._state is None:
+            self._state = self._load_state()
+        return self._state
+
+    def _load_state(self) -> dict:
         return self._snapshot().properties
 
     def _state_props(self, src: InternalSnapshot | TableChange, mode: str) -> dict:
@@ -101,16 +135,17 @@ class _HandleTarget:
         carried = {k: v for k, v in snapshot.properties.items()
                    if not k.startswith("xtable.")}
         props = {**carried, **self._state_props(snapshot, "FULL")}
-        v = self.handle.commit(
+        v = self._commit(
             adds, removes, schema=schema,
             properties=props,
             operation="xtable-full-sync",
             extra_meta=props)
         self._snap = None
+        self._state = None
         self._schema = snapshot.schema
         return v
 
-    # -- INCREMENTAL: replay one source commit -------------------------------
+    # -- INCREMENTAL: replay one source commit (or a coalesced range) --------
     def incremental_sync(self, change: TableChange) -> str:
         if self.handle is None:
             raise RuntimeError("incremental sync on uninitialized target")
@@ -119,12 +154,16 @@ class _HandleTarget:
         if change.schema is not None and not cur_schema.logical_eq(change.schema):
             schema = change.schema
         props = {**change.extra, **self._state_props(change, "INCREMENTAL")}
-        v = self.handle.commit(
+        extra = dict(props)
+        if change.lineage:   # coalesced range: keep per-commit provenance
+            extra[LINEAGE_KEY] = json.dumps(list(change.lineage))
+        v = self._commit(
             [f.to_meta() for f in change.adds], list(change.removes),
             schema=schema, properties=props,
             operation=f"xtable-incr-{change.operation}",
-            extra_meta=props)
+            extra_meta=extra)
         self._snap = None
+        self._state = None
         if change.schema is not None:
             self._schema = change.schema
         return v
@@ -134,6 +173,21 @@ class DeltaTarget(_HandleTarget):
     handle_cls = DeltaTable
     format = "delta"
 
+    # sync state lives in the table configuration, which every sync commit
+    # rewrites in its metaData action — the log TAIL answers "where is this
+    # target?" in one read; replaying the whole log per planning pass would
+    # make token reads O(history)
+    def _load_state(self) -> dict:
+        _, schema, _, props = self.handle.tail_state()
+        if self._schema is None:
+            self._schema = schema
+        return props
+
+    def _current_schema(self):
+        if self._schema is None:
+            self._schema = self.handle.tail_state()[1]
+        return self._schema
+
 
 class IcebergTarget(_HandleTarget):
     handle_cls = IcebergTable
@@ -141,7 +195,7 @@ class IcebergTarget(_HandleTarget):
 
     # iceberg keeps properties and schema in the metadata JSON; reading sync
     # state must not materialize the file list from every manifest
-    def _read_state(self) -> dict:
+    def _load_state(self) -> dict:
         return self.handle.properties()
 
     def _current_schema(self):
@@ -154,15 +208,30 @@ class HudiTarget(_HandleTarget):
     handle_cls = HudiTable
     format = "hudi"
 
-    def _read_state(self) -> dict:
-        # hudi keeps sync state in the latest commit's extraMetadata
+    def _load_state(self) -> dict:
+        # hudi keeps sync state in the latest commit's extraMetadata, whose
+        # values arrive already decoded by the shared extraMetadata codec
         em = self.handle.latest_extra_metadata()
-        props = self.handle.properties()
-        out = dict(props)
+        if self._schema is None and em.get("schema"):
+            self._schema = schema_from_avro(em["schema"])
+        out = dict(self.handle.properties())
         for k in (TOKEN_KEY, SOURCE_FMT_KEY, MODE_KEY):
             if k in em:
-                out[k] = em[k] if not em[k].startswith('"') else json.loads(em[k])
+                # sync-state values are strings by contract; a foreign/legacy
+                # writer storing a raw numeric token (e.g. "7" for a delta
+                # version) decodes as a scalar — coerce it back
+                out[k] = em[k] if isinstance(em[k], str) else str(em[k])
         return out
+
+    def _current_schema(self):
+        # the schema rides in the newest instant's extraMetadata — one
+        # instant read instead of a whole-timeline replay
+        if self._schema is None:
+            em = self.handle.latest_extra_metadata()
+            s = em.get("schema") or \
+                self.handle._read_props()["hoodie.table.create.schema"]
+            self._schema = schema_from_avro(s)
+        return self._schema
 
 
 TARGETS = {"delta": DeltaTarget, "iceberg": IcebergTarget, "hudi": HudiTarget}

@@ -8,22 +8,29 @@ statistics).
 
 Layout (single object, written atomically):
 
-    [4-byte magic "CHK1"] [msgpack body] [8-byte LE footer offset] [4-byte magic]
+    [4-byte magic "CHK2"] [msgpack body] [msgpack footer]
+    [8-byte LE footer offset] [4-byte magic]
 
 The body is a msgpack map:
     schema:   [{name, dtype, shape}]          column declarations
     nrows:    int
     columns:  {name: raw little-endian bytes (optionally zlib)}
-    stats:    {name: {min, max, count, nan_count}}
     extra:    arbitrary user metadata (tensor shard coords, tokenizer id, ...)
 
-Statistics live in the same object (Parquet-footer style) but are *also*
-duplicated into every format's metadata layer by the commit path, which is
-what makes metadata-only translation carry pruning power across formats.
+The footer is a msgpack map ``{nrows, stats}`` with
+``stats: {name: {min, max, count, nan_count}}``; the trailing 8-byte
+little-endian integer is the footer's byte offset from the start of the
+object, so ``read_chunk_stats`` needs two ranged reads (tail + footer) and
+never fetches the column data — the Parquet-footer access pattern.
+
+Statistics live in the same object but are *also* duplicated into every
+format's metadata layer by the commit path, which is what makes
+metadata-only translation carry pruning power across formats.
 """
 
 from __future__ import annotations
 
+import struct
 import zlib
 from dataclasses import dataclass, field
 from typing import Any, Mapping
@@ -31,8 +38,17 @@ from typing import Any, Mapping
 import msgpack
 import numpy as np
 
-MAGIC = b"CHK1"
+MAGIC = b"CHK2"       # v2: stats footer + trailing footer offset
+_MAGIC_V1 = b"CHK1"   # v1 had stats inline in the body and no footer
 _STR_KIND = "U"
+
+
+def _check_magic(tag: bytes) -> None:
+    if tag == _MAGIC_V1:
+        raise ValueError("chunkfile v1 (CHK1, no stats footer) is "
+                         "unsupported; rewrite the data file")
+    if tag != MAGIC:
+        raise ValueError("not a chunkfile (bad magic)")
 
 
 @dataclass(frozen=True)
@@ -135,10 +151,14 @@ def serialize_chunk(columns: Mapping[str, np.ndarray], *, extra: dict | None = N
         "schema": decls,
         "nrows": nrows or 0,
         "columns": blobs,
-        "stats": {k: v.to_dict() for k, v in stats.items()},
         "extra": extra or {},
     }
-    payload = MAGIC + msgpack.packb(body) + MAGIC
+    footer = {"nrows": nrows or 0,
+              "stats": {k: v.to_dict() for k, v in stats.items()}}
+    body_packed = msgpack.packb(body)
+    footer_off = len(MAGIC) + len(body_packed)
+    payload = (MAGIC + body_packed + msgpack.packb(footer) +
+               struct.pack("<Q", footer_off) + MAGIC)
     return payload, nrows or 0, stats
 
 
@@ -155,21 +175,44 @@ def write_chunk(fs, base_path: str, rel_path: str,
                         column_stats=stats, extra=dict(extra or {}))
 
 
-def _unpack(data: bytes) -> dict:
-    if data[:4] != MAGIC or data[-4:] != MAGIC:
-        raise ValueError("not a chunkfile (bad magic)")
-    return msgpack.unpackb(data[4:-4], strict_map_key=False)
+_TRAILER_LEN = 8 + len(MAGIC)   # footer offset + closing magic
+
+
+def _unpack(data: bytes) -> tuple[dict, dict]:
+    """Full-object parse -> (body, footer)."""
+    _check_magic(data[:4])
+    _check_magic(data[-4:])
+    (footer_off,) = struct.unpack("<Q", data[-_TRAILER_LEN:-len(MAGIC)])
+    if not len(MAGIC) <= footer_off <= len(data) - _TRAILER_LEN:
+        raise ValueError("not a chunkfile (bad footer offset)")
+    body = msgpack.unpackb(data[len(MAGIC):footer_off], strict_map_key=False)
+    footer = msgpack.unpackb(data[footer_off:-_TRAILER_LEN],
+                             strict_map_key=False)
+    return body, footer
 
 
 def read_chunk(fs, base_path: str, rel_path: str) -> tuple[dict, dict]:
     """Read columns + extra metadata of a data file."""
-    body = _unpack(fs.read_bytes(f"{base_path}/{rel_path}"))
+    body, _ = _unpack(fs.read_bytes(f"{base_path}/{rel_path}"))
     cols = {d["name"]: _decode_array(d, body["columns"][d["name"]])
             for d in body["schema"]}
     return cols, body.get("extra", {})
 
 
 def read_chunk_stats(fs, base_path: str, rel_path: str) -> tuple[int, dict]:
-    """Read only nrows + stats (cheap-ish here; a real store would range-read the footer)."""
-    body = _unpack(fs.read_bytes(f"{base_path}/{rel_path}"))
-    return body["nrows"], {k: ColumnStats.from_dict(v) for k, v in body["stats"].items()}
+    """Read only nrows + stats via two ranged reads (trailer, then footer);
+    the column data is never fetched."""
+    full = f"{base_path}/{rel_path}"
+    size = fs.size(full)
+    if size < 2 * len(MAGIC) + _TRAILER_LEN:
+        raise ValueError("not a chunkfile (truncated)")
+    tail = fs.read_bytes_range(full, size - _TRAILER_LEN, _TRAILER_LEN)
+    _check_magic(tail[-4:])
+    (footer_off,) = struct.unpack("<Q", tail[:8])
+    if not len(MAGIC) <= footer_off <= size - _TRAILER_LEN:
+        raise ValueError("not a chunkfile (bad footer offset)")
+    footer = msgpack.unpackb(
+        fs.read_bytes_range(full, footer_off, size - _TRAILER_LEN - footer_off),
+        strict_map_key=False)
+    return footer["nrows"], {k: ColumnStats.from_dict(v)
+                             for k, v in footer["stats"].items()}

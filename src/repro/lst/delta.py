@@ -180,6 +180,31 @@ class DeltaTable:
             raise ValueError(f"no metaData action found up to version {target}")
         return TableState(FORMAT, str(target), ts, schema, pspec, files, props)
 
+    def tail_state(self) -> tuple[str, Schema, PartitionSpec, dict]:
+        """(head version, schema, partition spec, configuration) from the log
+        *tail*: scan backwards until a ``metaData`` action, falling back to
+        the checkpoint.  A sync-maintained target writes a metaData action on
+        every commit (the sync token lives in the configuration), so this is
+        one read regardless of history length — the O(1) way to answer "where
+        is this target?" without replaying the log.
+        """
+        versions = self._list_versions()
+        if not versions:
+            raise FileNotFoundError("empty delta log")
+        head = str(versions[-1])
+        cp = self._last_checkpoint()
+        for v in reversed(versions):
+            if cp is not None and v <= cp:
+                break
+            for a in reversed(self._read_actions(v)):
+                if "metaData" in a:
+                    return (head, *_unpack_metadata(a["metaData"]))
+        if cp is not None:
+            for a in self._read_checkpoint(cp):
+                if "metaData" in a:
+                    return (head, *_unpack_metadata(a["metaData"]))
+        raise ValueError("no metaData action in delta log")
+
     def changes(self, version: str) -> tuple[list[DataFileMeta], list[str], str, dict]:
         """(adds, removed paths, operation, commit-info) for one commit."""
         adds, removes, op, info = [], [], "unknown", {}
@@ -193,8 +218,10 @@ class DeltaTable:
                 info = a["commitInfo"]
         return adds, removes, op, info
 
-    def replay(self) -> tuple[TableState | None, list[CommitEntry]]:
-        """Single-pass scan of the whole log -> per-commit entries.
+    def replay(self, since: str | None = None,
+               seed: CommitEntry | None = None
+               ) -> tuple[TableState | None, list[CommitEntry]]:
+        """Single-pass scan of the log -> per-commit entries.
 
         Returns ``(base, entries)``.  ``entries`` is one ``CommitEntry`` per
         surviving log version, in order; folding their adds/removes on top of
@@ -202,12 +229,44 @@ class DeltaTable:
         is ``None`` in the normal case (fold from the empty table); it is the
         checkpoint state when early log files were vacuumed behind a
         checkpoint and per-commit history below it no longer exists.
+
+        With ``since`` set, only commits strictly AFTER that version are
+        scanned (tail-only refresh); ``base`` is then always ``None``.
+        ``seed`` (the caller's ``CommitEntry`` for ``since``) supplies the
+        as-of schema/spec/properties so the tail costs O(new commits) reads;
+        without it the metaData is recovered from the tail/checkpoint scan.
+        Raises ``KeyError`` if ``since`` is no longer in the log (vacuumed) —
+        callers fall back to a full replay.
         """
         versions = self._list_versions()
         schema, pspec, props, ts = None, PartitionSpec(), {}, 0
         base = None
         start_after = -1
         cp = self._last_checkpoint()
+        if since is not None:
+            sv = int(since)
+            if sv not in versions and (cp is None or sv != cp):
+                raise KeyError(f"version {since} not in delta log")
+            if seed is not None:
+                schema, pspec, props = (seed.schema, seed.partition_spec,
+                                        dict(seed.properties))
+                ts = seed.timestamp_ms
+            elif cp is not None and sv == cp:
+                # resuming right at the checkpoint base: its metaData seeds
+                for a in self._read_checkpoint(cp):
+                    if "metaData" in a:
+                        schema, pspec, props = _unpack_metadata(a["metaData"])
+            else:
+                raise KeyError(f"no seed state for version {since}")
+            start_after = sv
+            entries = []
+            for v in versions:
+                if v <= start_after:
+                    continue
+                schema, pspec, props, ts, e = self._entry_of(
+                    v, schema, pspec, props, ts)
+                entries.append(e)
+            return None, entries
         if cp is not None and (not versions or versions[0] > 0):
             files: dict[str, DataFileMeta] = {}
             for a in self._read_checkpoint(cp):
@@ -219,27 +278,30 @@ class DeltaTable:
         for v in versions:
             if v <= start_after:
                 continue
-            adds, removes, op, info = [], [], "unknown", {}
-            for a in self._read_actions(v):
-                if "metaData" in a:
-                    m = a["metaData"]
-                    schema = schema_from_delta(m["schemaString"])
-                    pspec = PartitionSpec(m.get("partitionColumns", []))
-                    props = dict(m.get("configuration", {}))
-                elif "add" in a:
-                    adds.append(_file_from_add(a["add"]))
-                    ts = max(ts, a["add"].get("modificationTime", 0))
-                elif "remove" in a:
-                    removes.append(a["remove"]["path"])
-                    ts = max(ts, a["remove"].get("deletionTimestamp", 0))
-                elif "commitInfo" in a:
-                    op = a["commitInfo"].get("operation", "unknown")
-                    info = a["commitInfo"]
-                    ts = max(ts, a["commitInfo"].get("timestamp", 0))
-            entries.append(CommitEntry(str(v), ts, op, tuple(adds),
-                                       tuple(removes), schema, pspec,
-                                       dict(props), info))
+            schema, pspec, props, ts, e = self._entry_of(
+                v, schema, pspec, props, ts)
+            entries.append(e)
         return base, entries
+
+    def _entry_of(self, v: int, schema, pspec, props, ts):
+        """Scan one log file -> updated running state + its CommitEntry."""
+        adds, removes, op, info = [], [], "unknown", {}
+        for a in self._read_actions(v):
+            if "metaData" in a:
+                schema, pspec, props = _unpack_metadata(a["metaData"])
+            elif "add" in a:
+                adds.append(_file_from_add(a["add"]))
+                ts = max(ts, a["add"].get("modificationTime", 0))
+            elif "remove" in a:
+                removes.append(a["remove"]["path"])
+                ts = max(ts, a["remove"].get("deletionTimestamp", 0))
+            elif "commitInfo" in a:
+                op = a["commitInfo"].get("operation", "unknown")
+                info = a["commitInfo"]
+                ts = max(ts, a["commitInfo"].get("timestamp", 0))
+        return schema, pspec, props, ts, CommitEntry(
+            str(v), ts, op, tuple(adds), tuple(removes), schema, pspec,
+            dict(props), info)
 
     def properties(self) -> dict:
         return self.snapshot().properties
@@ -310,9 +372,118 @@ class DeltaTable:
         raw = self.fs.read_bytes(self._log_path(version, checkpoint=True)).decode()
         return [json.loads(line) for line in raw.splitlines() if line.strip()]
 
+    # ----------------------------------------------------------- transaction
+    def transaction(self, *, schema: Schema | None = None) -> "DeltaTransaction":
+        """Multi-commit transaction: read the log tail ONCE, then thread the
+        (version counter, schema, spec, configuration) through every commit
+        in memory — each flush is one put-if-absent log write with zero
+        re-reads, instead of the full-snapshot-per-commit of ``commit()``."""
+        return DeltaTransaction(self, schema=schema)
+
+
+class DeltaTransaction:
+    """Buffered writer state for an N-commit sync unit (single writer).
+
+    Begin cost: one ``list_dir`` + the tail metaData read.  Per commit: one
+    put-if-absent write, no reads.  The file list is only materialized if a
+    checkpoint boundary is crossed (bounded by the checkpoint interval, not
+    the table history), then kept up to date in memory.
+    """
+
+    def __init__(self, table: DeltaTable, *, schema: Schema | None = None):
+        self.t = table
+        head, tail_schema, pspec, props = table.tail_state()
+        self._version = int(head)
+        self._schema = schema or tail_schema
+        self._pspec = pspec
+        self._props = props
+        self._files: dict[str, DataFileMeta] | None = None   # lazy (checkpoint)
+
+    @property
+    def version(self) -> str:
+        return str(self._version)
+
+    def commit(self, adds: list[DataFileMeta] = (), removes: list[str] = (), *,
+               schema: Schema | None = None, properties: dict | None = None,
+               operation: str = "WRITE", extra_meta: dict | None = None,
+               max_retries: int = 5) -> str:
+        for _ in range(max_retries):
+            version = self._version + 1
+            ts = _now_ms()
+            new_schema = schema or self._schema
+            new_props = dict(self._props)
+            new_props.update({k: str(v) for k, v in (properties or {}).items()})
+            actions: list[dict] = []
+            if schema is not None or properties:
+                actions.append(_metadata_action(new_schema, self._pspec,
+                                                new_props, ts))
+            for p in removes:
+                actions.append({"remove": {"path": p, "deletionTimestamp": ts,
+                                           "dataChange": True}})
+            for f in adds:
+                actions.append(_add_action(f, ts))
+            ci = {"timestamp": ts, "operation": operation,
+                  "operationParameters": {}}
+            if extra_meta:
+                ci["xtable"] = extra_meta
+            actions.append({"commitInfo": ci})
+            try:
+                self.t._write_commit(version, actions)
+            except CommitConflict:
+                # a concurrent writer took this version: re-sync the counter
+                # and config from the tail and try the next slot
+                head, self._schema, self._pspec, self._props = \
+                    self.t.tail_state()
+                self._version = int(head)
+                self._files = None
+                continue
+            self._version = version
+            self._schema = new_schema
+            self._props = new_props
+            if self._files is not None:
+                for p in removes:
+                    self._files.pop(p, None)
+                for f in adds:
+                    self._files[f.path] = f
+            self._maybe_checkpoint(version, ts)
+            return str(version)
+        raise CommitConflict("delta transactional commit retries exhausted")
+
+    def _maybe_checkpoint(self, version: int, ts: int) -> None:
+        try:
+            interval = int(self._props.get(CHECKPOINT_INTERVAL_KEY,
+                                           DEFAULT_CHECKPOINT_INTERVAL))
+        except (TypeError, ValueError):
+            interval = DEFAULT_CHECKPOINT_INTERVAL
+        if version == 0 or version % interval:
+            return
+        if self._files is None:   # one bounded read-back, then tracked
+            self._files = dict(self.t.snapshot(str(version)).files)
+        actions = [{"protocol": {"minReaderVersion": 1, "minWriterVersion": 2}},
+                   _metadata_action(self._schema, self._pspec, self._props, ts)]
+        actions += [_add_action(f, ts) for f in self._files.values()]
+        try:
+            self.t.fs.write_bytes(
+                self.t._log_path(version, checkpoint=True),
+                "\n".join(json.dumps(a) for a in actions).encode())
+        except PutIfAbsentError:
+            return  # concurrent checkpointer won; fine
+        self.t.fs.write_bytes(join(self.t.base, LOG_DIR, "_last_checkpoint"),
+                              json.dumps({"version": version}).encode(),
+                              overwrite=True)
+
+    def close(self) -> None:
+        pass
+
 
 class CommitConflict(RuntimeError):
     pass
+
+
+def _unpack_metadata(m: dict) -> tuple[Schema, PartitionSpec, dict]:
+    return (schema_from_delta(m["schemaString"]),
+            PartitionSpec(m.get("partitionColumns", [])),
+            dict(m.get("configuration", {})))
 
 
 def _metadata_action(schema: Schema, pspec: PartitionSpec, props: dict,

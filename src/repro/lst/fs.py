@@ -22,9 +22,11 @@ class PutIfAbsentError(FileExistsError):
 @runtime_checkable
 class FileSystem(Protocol):
     def read_bytes(self, path: str) -> bytes: ...
+    def read_bytes_range(self, path: str, offset: int, length: int) -> bytes: ...
     def write_bytes(self, path: str, data: bytes, *, overwrite: bool = False) -> None: ...
     def exists(self, path: str) -> bool: ...
     def list_dir(self, path: str) -> list[str]: ...
+    def size(self, path: str) -> int: ...
     def delete(self, path: str) -> None: ...
 
 
@@ -43,13 +45,25 @@ class LocalFS:
     atomic, per §2 of the paper).
     """
 
-    def __init__(self) -> None:
+    def __init__(self, *, fsync: bool = True) -> None:
+        """``fsync=False`` skips the per-object fsync: atomicity (staged
+        temp file + atomic link) is unchanged, only crash durability is
+        relaxed — the knob benchmarks use so metadata-translation work is
+        measured instead of disk flushes (object stores own durability and
+        expose no fsync)."""
         self._lock = threading.Lock()
+        self._fsync = fsync
 
     # -- reads ------------------------------------------------------------
     def read_bytes(self, path: str) -> bytes:
         with open(path, "rb") as f:
             return f.read()
+
+    def read_bytes_range(self, path: str, offset: int, length: int) -> bytes:
+        """Ranged GET (object-store style): ``length`` bytes from ``offset``."""
+        with open(path, "rb") as f:
+            f.seek(offset)
+            return f.read(length)
 
     def exists(self, path: str) -> bool:
         return os.path.exists(path)
@@ -70,7 +84,8 @@ class LocalFS:
         with open(tmp, "wb") as f:
             f.write(data)
             f.flush()
-            os.fsync(f.fileno())
+            if self._fsync:
+                os.fsync(f.fileno())
         if overwrite:
             os.replace(tmp, path)  # atomic swap
             return

@@ -59,6 +59,38 @@ def schema_from_avro(s: str) -> Schema:
     return Schema(out)
 
 
+# -- extraMetadata value codec ---------------------------------------------
+# Every non-reserved value in a completed instant's ``extraMetadata`` is
+# JSON-encoded on write and JSON-decoded on read, by this one pair — the
+# commit path and every reader share it, so there is no "does it look
+# quoted?" guessing (a string value that happens to start with '"' round-
+# trips exactly).  ``schema`` is reserved: it is already an Avro JSON
+# document and is stored/consumed verbatim by ``snapshot``/``replay``.
+_EM_RAW_KEYS = frozenset({"schema"})
+
+
+def encode_extra_metadata(extra: dict) -> dict:
+    return {k: v if k in _EM_RAW_KEYS else json.dumps(v)
+            for k, v in extra.items()}
+
+
+def decode_extra_metadata(extra: dict) -> dict:
+    out = {}
+    for k, v in extra.items():
+        if k in _EM_RAW_KEYS:
+            out[k] = v
+            continue
+        try:
+            out[k] = json.loads(v)
+        except (TypeError, ValueError):
+            # foreign writer storing a raw non-JSON string; NOTE a raw
+            # string that parses as a JSON scalar ("7", "true") is
+            # indistinguishable from the codec's encoding of that scalar —
+            # consumers needing a string must coerce (see targets.py)
+            out[k] = v
+    return out
+
+
 _instant_lock = threading.Lock()
 _last_instant = [0]
 
@@ -212,14 +244,22 @@ class HudiTable:
                            payload.get("partitionToReplacedFilePaths", {}).values()
                            for p in paths]
                 return adds, removes, payload.get("operationType", "unknown"), \
-                    dict(payload.get("extraMetadata", {}))
+                    decode_extra_metadata(payload.get("extraMetadata", {}))
         raise KeyError(f"instant {version} not found")
 
-    def replay(self) -> tuple[TableState, list[CommitEntry]]:
+    def replay(self, since: str | None = None,
+               seed: CommitEntry | None = None
+               ) -> tuple[TableState | None, list[CommitEntry]]:
         """Single-pass scan of the timeline -> per-instant entries.
 
         Each completed instant payload is read exactly once; the base state
         is the empty pre-first-instant table (version "0").
+
+        With ``since`` set, only instants AFTER that timestamp are read
+        (tail-only refresh, ``base`` is ``None``); ``seed`` — the caller's
+        ``CommitEntry`` for ``since`` — supplies the as-of schema, so the
+        tail costs O(new instants) reads.  Raises ``KeyError`` if ``since``
+        is not a completed instant.
         """
         props = self._read_props()
         schema = schema_from_avro(props["hoodie.table.create.schema"])
@@ -227,10 +267,23 @@ class HudiTable:
         spec = PartitionSpec([c for c in pf.split(",") if c])
         user_props = {k: v for k, v in props.items()
                       if not k.startswith("hoodie.")}
-        base = TableState(FORMAT, "0", 0, schema, spec, {}, user_props)
+        timeline = self._timeline()
+        base: TableState | None = TableState(FORMAT, "0", 0, schema, spec, {},
+                                             user_props)
         ts_ms = 0
+        if since is not None and since != "0":
+            if since not in {ts for ts, _ in timeline}:
+                raise KeyError(f"instant {since} not in hudi timeline")
+            if seed is None:   # no as-of schema to resume from
+                raise KeyError(f"no seed state for instant {since}")
+            timeline = [(ts, a) for ts, a in timeline if ts > since]
+            base = None
+            schema = seed.schema
+            ts_ms = seed.timestamp_ms
+        elif since is not None:
+            base = None
         entries = []
-        for ts, action in self._timeline():
+        for ts, action in timeline:
             payload = self._instant_payload(ts, action)
             adds = [_file_from_stat(w) for stats in
                     payload.get("partitionToWriteStats", {}).values()
@@ -244,7 +297,7 @@ class HudiTable:
             entries.append(CommitEntry(
                 ts, ts_ms, payload.get("operationType", "unknown"),
                 tuple(adds), tuple(removes), schema, spec, dict(user_props),
-                dict(payload.get("extraMetadata", {}))))
+                decode_extra_metadata(payload.get("extraMetadata", {}))))
         return base, entries
 
     def properties(self) -> dict:
@@ -255,7 +308,8 @@ class HudiTable:
         tl = self._timeline()
         if not tl:
             return {}
-        return dict(self._instant_payload(*tl[-1]).get("extraMetadata", {}))
+        return decode_extra_metadata(
+            self._instant_payload(*tl[-1]).get("extraMetadata", {}))
 
     # --------------------------------------------------------------- commits
     def commit(self, adds: list[DataFileMeta] = (), removes: list[str] = (), *,
@@ -284,12 +338,11 @@ class HudiTable:
             cur_schema = schema if schema is not None else self.snapshot().schema
             extra = {"schema": schema_to_avro(cur_schema)}
             if extra_meta:
-                extra.update({k: v if isinstance(v, str) else json.dumps(v)
-                              for k, v in extra_meta.items()})
+                extra.update(extra_meta)
             payload = {"partitionToWriteStats": p2ws,
                        "operationType": operation.upper(),
                        "timestampMs": time.time_ns() // 1_000_000,
-                       "extraMetadata": extra}
+                       "extraMetadata": encode_extra_metadata(extra)}
             if removes:
                 payload["partitionToReplacedFilePaths"] = p2rf
             try:
@@ -303,3 +356,79 @@ class HudiTable:
                 self._write_props(props)
             return instant
         raise CommitConflict("hudi commit retries exhausted")
+
+    # ----------------------------------------------------------- transaction
+    def transaction(self, *, schema: Schema | None = None) -> "HudiTransaction":
+        """Multi-commit transaction: read the properties + latest instant
+        ONCE, keep the schema and table properties in memory, and write each
+        instant's three-phase files without any re-read of the timeline."""
+        return HudiTransaction(self, schema=schema)
+
+
+class HudiTransaction:
+    """Buffered writer state for an N-instant sync unit (single writer).
+
+    Begin cost: one properties read (+ one latest-instant read when the
+    schema is not seeded by the caller).  Per commit: zero reads — the
+    timeline replay hiding inside ``commit()``'s ``snapshot()`` is replaced
+    by the tracked in-memory schema/properties.
+    """
+
+    def __init__(self, table: HudiTable, *, schema: Schema | None = None):
+        self.t = table
+        self._props = table._read_props()
+        if schema is not None:
+            self._schema = schema
+        else:
+            em = table.latest_extra_metadata()
+            self._schema = schema_from_avro(
+                em.get("schema") or self._props["hoodie.table.create.schema"])
+
+    def commit(self, adds: list[DataFileMeta] = (), removes: list[str] = (), *,
+               schema: Schema | None = None, properties: dict | None = None,
+               operation: str = "upsert", extra_meta: dict | None = None,
+               max_retries: int = 5) -> str:
+        action = "replacecommit" if removes else "commit"
+        cur_schema = schema if schema is not None else self._schema
+        for _ in range(max_retries):
+            instant = new_instant()
+            hdir = join(self.t.base, HOODIE_DIR)
+            try:
+                self.t.fs.write_bytes(
+                    join(hdir, f"{instant}.{action}.requested"), b"{}")
+            except PutIfAbsentError:
+                continue
+            self.t.fs.write_bytes(join(hdir, f"{instant}.{action}.inflight"),
+                                  b"{}", overwrite=True)
+            p2ws: dict[str, list] = {}
+            for f in adds:
+                part = "/".join(f"{k}={v}" for k, v in
+                                f.partition_values.items())
+                p2ws.setdefault(part, []).append(_stat_entry(f))
+            p2rf: dict[str, list] = {}
+            for p in removes:
+                p2rf.setdefault(p.rsplit("/", 1)[0] if "/" in p else "", []) \
+                    .append(p)
+            extra = {"schema": schema_to_avro(cur_schema)}
+            if extra_meta:
+                extra.update(extra_meta)
+            payload = {"partitionToWriteStats": p2ws,
+                       "operationType": operation.upper(),
+                       "timestampMs": time.time_ns() // 1_000_000,
+                       "extraMetadata": encode_extra_metadata(extra)}
+            if removes:
+                payload["partitionToReplacedFilePaths"] = p2rf
+            try:
+                self.t.fs.write_bytes(join(hdir, f"{instant}.{action}"),
+                                      json.dumps(payload).encode())
+            except PutIfAbsentError:
+                continue
+            self._schema = cur_schema
+            if properties:
+                self._props.update({k: str(v) for k, v in properties.items()})
+                self.t._write_props(self._props)
+            return instant
+        raise CommitConflict("hudi transactional commit retries exhausted")
+
+    def close(self) -> None:
+        pass

@@ -240,21 +240,41 @@ class IcebergTable:
         return adds, removes, snap["summary"].get("operation", "unknown"), \
             dict(snap["summary"])
 
-    def replay(self) -> tuple[TableState, list[CommitEntry]]:
+    def replay(self, since: str | None = None,
+               seed: CommitEntry | None = None
+               ) -> tuple[TableState | None, list[CommitEntry]]:
         """Single-pass scan of the snapshot chain -> per-commit entries.
 
         Manifest files are read once each even though manifest *reuse* makes
         them appear in many snapshots' manifest lists, so the whole history
         costs one read per metadata object, not one per (snapshot, manifest).
         The base state is the empty pre-first-snapshot table (version "-1").
+
+        With ``since`` set, only snapshots AFTER that id are scanned
+        (tail-only refresh, ``base`` is ``None``); a snapshot's changes live
+        exclusively in manifests it added itself (``added-snapshot-id``), so
+        the tail never touches carried-forward manifests from older
+        snapshots.  Raises ``KeyError`` if ``since`` is not in the chain.
         """
         _, meta = self._read_metadata()
         cur_schema = self._schema_of(meta, meta["current-schema-id"])
         spec = spec_from_ice(meta["partition-specs"][meta["default-spec-id"]],
                              cur_schema)
         props = dict(meta["properties"])
-        base = TableState(FORMAT, "-1", meta["last-updated-ms"], cur_schema,
-                          spec, {}, props)
+        snaps = sorted(meta["snapshots"], key=lambda s: s["sequence-number"])
+        base: TableState | None = TableState(
+            FORMAT, "-1", meta["last-updated-ms"], cur_schema, spec, {}, props)
+        tail_only = since is not None and since != "-1"
+        if tail_only:
+            known = {str(s["snapshot-id"]) for s in snaps}
+            if since not in known:
+                raise KeyError(f"snapshot {since} not in iceberg chain")
+            snaps = [s for s in snaps if s["sequence-number"] >
+                     next(x["sequence-number"] for x in snaps
+                          if str(x["snapshot-id"]) == since)]
+            base = None
+        elif since is not None:   # since == "-1": tail == whole chain
+            base = None
         manifest_memo: dict[str, list[dict]] = {}
 
         def read_manifest(path: str) -> list[dict]:
@@ -263,10 +283,14 @@ class IcebergTable:
             return manifest_memo[path]
 
         entries = []
-        for snap in sorted(meta["snapshots"], key=lambda s: s["sequence-number"]):
+        for snap in snaps:
             sid = snap["snapshot-id"]
             adds, removes = [], []
             for m in self._read_manifest_list(snap["manifest-list"]):
+                # a snapshot's ADDED/DELETED entries only live in manifests
+                # written at that snapshot; skip reused ones on tail scans
+                if tail_only and m.get("added-snapshot-id") != sid:
+                    continue
                 for e in read_manifest(m["manifest-path"]):
                     if e["snapshot-id"] != sid:
                         continue
@@ -379,6 +403,158 @@ class IcebergTable:
         })
         self._write_metadata(n + 1, new_meta)
         return str(sid)
+
+    # ----------------------------------------------------------- transaction
+    def transaction(self, *, schema: Schema | None = None
+                    ) -> "IcebergTransaction":
+        """Multi-commit transaction: parse ``v{N}.metadata.json`` ONCE and
+        thread the metadata dict + manifest-list through every commit in
+        memory — per commit only the NEW manifests, the manifest list and
+        the next metadata file are written, and nothing is re-read."""
+        return IcebergTransaction(self)
+
+
+class IcebergTransaction:
+    """Buffered writer state for an N-commit sync unit (single writer).
+
+    Begin cost: one metadata-JSON read; the parent manifest-list is read
+    lazily on the first commit.  Append commits: zero reads, three writes.
+    A commit with removes must locate the removed entries, which opens the
+    live parent manifests — but at most ONCE EACH per transaction (memoized,
+    and rewritten/added manifests enter the memo at write time), instead of
+    once per commit as on the non-transactional path.
+    """
+
+    def __init__(self, table: IcebergTable):
+        self.t = table
+        self.n, self.meta = table._read_metadata()
+        self._manifests: list[dict] | None = None    # current manifest list
+        self._manifest_memo: dict[str, list[dict]] = {}
+
+    @property
+    def version(self) -> str:
+        return str(self.meta["current-snapshot-id"])
+
+    def _read_manifest(self, path: str) -> list[dict]:
+        if path not in self._manifest_memo:
+            self._manifest_memo[path] = self.t._read_manifest(path)
+        return self._manifest_memo[path]
+
+    def _parent_manifests(self) -> list[dict]:
+        if self._manifests is None:
+            if self.meta["current-snapshot-id"] == -1:
+                self._manifests = []
+            else:
+                parent = self.t._snapshot_rec(self.meta,
+                                              self.meta["current-snapshot-id"])
+                self._manifests = self.t._read_manifest_list(
+                    parent["manifest-list"])
+        return self._manifests
+
+    def commit(self, adds: list[DataFileMeta] = (), removes: list[str] = (), *,
+               schema: Schema | None = None, properties: dict | None = None,
+               operation: str = "append", extra_meta: dict | None = None,
+               max_retries: int = 5) -> str:
+        for _ in range(max_retries):
+            try:
+                return self._commit_once(adds, removes, schema, properties,
+                                         operation, extra_meta)
+            except (CommitConflict, PutIfAbsentError):
+                # a concurrent writer advanced the table (detected either at
+                # the metadata put or earlier, at a manifest/manifest-list
+                # name collision — the in-memory sid is stale for the whole
+                # transaction, not just a read-modify-write window):
+                # re-read and retry with a fresh sequence number
+                self.n, self.meta = self.t._read_metadata()
+                self._manifests = None
+                continue
+        raise CommitConflict("iceberg transactional commit retries exhausted")
+
+    def _commit_once(self, adds, removes, schema, properties, operation,
+                     extra_meta) -> str:
+        meta = self.meta
+        seq = meta["last-sequence-number"] + 1
+        sid = seq
+        ts = _now_ms()
+        removes = set(removes)
+
+        # -- carry forward the in-memory manifest list; only manifests that
+        #    contain a removed path are opened (memoized) and rewritten
+        manifests: list[dict] = []
+        for m in self._parent_manifests():
+            live = (m.get("added-files-count", 0) +
+                    m.get("existing-files-count", 0))
+            if not live:
+                continue
+            if removes:
+                entries = [e for e in self._read_manifest(m["manifest-path"])
+                           if e["status"] != DELETED]
+                if any(e["data-file"]["file-path"] in removes
+                       for e in entries):
+                    new_entries = []
+                    for e in entries:
+                        if e["data-file"]["file-path"] in removes:
+                            new_entries.append({**e, "status": DELETED,
+                                                "snapshot-id": sid})
+                        else:
+                            new_entries.append({**e, "status": EXISTING})
+                    rel = self.t._write_manifest(
+                        f"manifest-{sid}-rw{len(manifests)}.json", new_entries)
+                    self._manifest_memo[rel] = new_entries
+                    manifests.append(_mf_entry(rel, sid, new_entries))
+                    continue
+            manifests.append({**m, "added-files-count": 0,
+                              "existing-files-count": live,
+                              "deleted-files-count": 0})
+        if adds:
+            entries = [_file_to_entry(f, ADDED, sid) for f in adds]
+            rel = self.t._write_manifest(f"manifest-{sid}-add.json", entries)
+            self._manifest_memo[rel] = entries
+            manifests.append(_mf_entry(rel, sid, entries))
+
+        ml_rel = join(META_DIR, f"snap-{sid}.manifest-list.json")
+        self.t.fs.write_bytes(join(self.t.base, ml_rel),
+                              json.dumps({"manifests": manifests}).encode())
+
+        summary = {"operation": operation,
+                   "added-data-files": str(len(adds)),
+                   "deleted-data-files": str(len(removes))}
+        if extra_meta:
+            summary.update({f"xtable.{k}": json.dumps(v) if not
+                            isinstance(v, str) else v
+                            for k, v in extra_meta.items()})
+
+        new_meta = dict(meta)
+        if schema is not None:
+            ice = schema_to_ice(Schema(schema.fields,
+                                       meta["current-schema-id"] + 1))
+            new_meta["schemas"] = meta["schemas"] + [ice]
+            new_meta["current-schema-id"] = ice["schema-id"]
+            new_meta["last-column-id"] = max(f["id"] for f in ice["fields"])
+        if properties:
+            new_meta["properties"] = {**meta["properties"],
+                                      **{k: str(v) for k, v in
+                                         properties.items()}}
+        new_meta.update({
+            "last-sequence-number": seq, "last-updated-ms": ts,
+            "current-snapshot-id": sid,
+            "snapshots": meta["snapshots"] + [{
+                "snapshot-id": sid,
+                "parent-snapshot-id": meta["current-snapshot-id"],
+                "sequence-number": seq, "timestamp-ms": ts,
+                "manifest-list": ml_rel, "summary": summary,
+                "schema-id": new_meta["current-schema-id"]}],
+            "snapshot-log": meta["snapshot-log"] + [
+                {"timestamp-ms": ts, "snapshot-id": sid}],
+        })
+        self.t._write_metadata(self.n + 1, new_meta)
+        self.n += 1
+        self.meta = new_meta
+        self._manifests = manifests
+        return str(sid)
+
+    def close(self) -> None:
+        pass
 
 
 def _mf_entry(rel: str, sid: int, entries: list[dict]) -> dict:

@@ -89,8 +89,36 @@ def test_index_refreshes_after_new_commits(fs):
     idx = TableMetadataIndex(t.handle)
     n0 = len(idx.versions())
     t.append({"k": np.array([7], np.int64), "part": np.array(["p0"])})
-    assert len(idx.versions()) == n0 + 1     # head moved -> rebuilt
-    assert idx.replays == 2
+    # head moved -> only the tail is replayed, never the whole log again
+    assert len(idx.versions()) == n0 + 1
+    assert idx.replays == 1 and idx.tail_replays == 1
+
+
+@pytest.mark.parametrize("fmt", ALL)
+def test_tail_refresh_reads_only_new_commits(fmt):
+    """After the index is built, k new commits cost O(k) metadata reads to
+    refresh — not a rebuild of the whole history."""
+    fs = CountingFS()
+    base, t = _mk_table(fs, fmt, n_commits=10)
+    idx = TableMetadataIndex(t.handle)
+    before = dict(idx.state_at().files)      # build: one full replay
+    news = [t.append({"k": np.array([200 + i], np.int64),
+                      "part": np.array(["p0"])}) for i in range(3)]
+    fs.reset()
+    versions = idx.versions()                # head moved -> tail replay
+    # the refresh read only tail-sized metadata: no old commit object was
+    # touched again (delta/hudi); iceberg re-reads only the single metadata
+    # JSON + the new snapshots' own manifests and manifest lists
+    meta_reads = sum(n for p, n in fs.reads.items()
+                     if "_delta_log" in p or ".hoodie" in p or
+                     "/metadata/" in p)
+    assert meta_reads <= 3 * 3 + 2, fs.reads
+    assert versions[-3:] == news
+    assert idx.replays == 1 and idx.tail_replays == 1
+    # every entry (old + new) still served correctly after the tail splice
+    head = idx.state_at()
+    assert set(head.files) == set(t.handle.snapshot().files)
+    assert set(before) <= set(head.files)
 
 
 # --------------------------------------------------------- one replay per run

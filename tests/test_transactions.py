@@ -1,0 +1,378 @@
+"""Transactional target writers, commit coalescing, chunkfile footer.
+
+The headline guarantees this file pins:
+
+* draining an incremental backlog costs O(1) target-side metadata READS —
+  both in the length of the target's own history (flat as the table grows
+  8 -> 64 commits) and in the length of the backlog (the transaction parses
+  the target state once and threads it through the drain, so commit k never
+  re-reads what commit k-1 just wrote);
+* ``coalesceIncremental`` folds an N-commit backlog into ONE net target
+  commit with an end state identical to the per-commit drain (files, stats,
+  schema, sync token), keeping per-commit lineage in the commit metadata;
+* ``maxCommitsPerSync`` bounds a drain and the next run continues from the
+  recorded token;
+* ``read_chunk_stats`` range-reads the stats footer and never fetches the
+  column data; Hudi ``extraMetadata`` values round-trip through one codec.
+"""
+
+import json
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import MetadataCache, SyncConfig, run_sync
+from repro.core.targets import LINEAGE_KEY, TOKEN_KEY
+from repro.lst import LakeTable, LocalFS, chunkfile
+from repro.lst.fs import join
+from repro.lst.schema import Field, PartitionSpec, Schema
+from repro.lst.table import Predicate
+
+SCHEMA = Schema([Field("k", "int64"), Field("part", "string")])
+ALL = ("delta", "iceberg", "hudi")
+META_DIR = {"delta": "_delta_log", "iceberg": "metadata", "hudi": ".hoodie"}
+
+
+class CountingFS(LocalFS):
+    """LocalFS counting read_bytes / read_bytes_range / write_bytes calls."""
+
+    def __init__(self):
+        super().__init__()
+        self.reads = {}
+        self.range_reads = {}
+        self.writes = {}
+
+    def read_bytes(self, path):
+        self.reads[path] = self.reads.get(path, 0) + 1
+        return super().read_bytes(path)
+
+    def read_bytes_range(self, path, offset, length):
+        self.range_reads[path] = self.range_reads.get(path, 0) + 1
+        return super().read_bytes_range(path, offset, length)
+
+    def write_bytes(self, path, data, *, overwrite=False):
+        self.writes[path] = self.writes.get(path, 0) + 1
+        return super().write_bytes(path, data, overwrite=overwrite)
+
+    def reset(self):
+        self.reads, self.range_reads, self.writes = {}, {}, {}
+
+    def reads_under(self, base, subdir):
+        d = join(base, subdir)
+        return sum(n for p, n in self.reads.items() if p.startswith(d))
+
+    def writes_under(self, base, subdir):
+        d = join(base, subdir)
+        return sum(n for p, n in self.writes.items() if p.startswith(d))
+
+
+def _mk_table(fs, fmt, n_commits, properties=None):
+    base = tempfile.mkdtemp() + "/t"
+    t = LakeTable.create(fs, base, SCHEMA, fmt, PartitionSpec(["part"]),
+                         properties)
+    for i in range(n_commits):
+        t.append({"k": np.array([i, i + 100], np.int64),
+                  "part": np.array([f"p{i % 2}", "p0"])})
+    return base, t
+
+
+def _cfg(bases, src, targets, **kw):
+    d = {"sourceFormat": src.upper(),
+         "targetFormats": [t.upper() for t in targets],
+         "datasets": [{"tableBasePath": b} for b in bases]}
+    d.update(kw)
+    return SyncConfig.from_dict(d)
+
+
+# --------------------------------------------------- O(1) in table history
+@pytest.mark.parametrize("src,tgt", [("delta", "iceberg"), ("delta", "hudi"),
+                                     ("hudi", "delta")])
+def test_target_reads_flat_in_history(src, tgt):
+    """Reads of the target's metadata during a fixed-size incremental drain
+    do not grow with the target's history length (8 vs 64 prior commits)."""
+
+    def drain_reads(history):
+        fs = CountingFS()
+        # a huge checkpoint interval keeps the delta-target measurement free
+        # of (bounded, but noisy) checkpoint-maintenance reads
+        base, t = _mk_table(fs, src, 1,
+                            properties={"delta.checkpointInterval": "1000"})
+        cfg = _cfg([base], src, [tgt])
+        cache = MetadataCache(fs)
+        run_sync(cfg, fs, cache=cache)                   # FULL bootstrap
+        for i in range(history):                         # grow BOTH histories
+            t.append({"k": np.array([1000 + i], np.int64),
+                      "part": np.array(["p0"])})
+            res = run_sync(cfg, fs, cache=cache)
+            assert res[0].ok and res[0].mode == "INCREMENTAL"
+        for i in range(4):                               # the measured backlog
+            t.append({"k": np.array([5000 + i], np.int64),
+                      "part": np.array(["p1"])})
+        fs.reset()
+        res = run_sync(cfg, fs, cache=cache)
+        assert res[0].ok and res[0].commits_synced == 4
+        return fs.reads_under(base, META_DIR[tgt])
+
+    r8, r64 = drain_reads(8), drain_reads(64)
+    assert r64 == r8, f"target reads grew with history: {r8} -> {r64}"
+
+
+def test_target_reads_flat_in_backlog_length():
+    """Reads of the target's metadata are also independent of how MANY
+    commits the unit drains — the per-commit flushes never re-read."""
+
+    def drain_reads(backlog):
+        fs = CountingFS()
+        base, t = _mk_table(fs, "delta", 4)
+        cfg = _cfg([base], "delta", ["iceberg", "hudi"])
+        run_sync(cfg, fs)
+        for i in range(backlog):
+            t.append({"k": np.array([100 + i], np.int64),
+                      "part": np.array(["p1"])})
+        fs.reset()
+        res = run_sync(cfg, fs)
+        assert all(r.ok and r.commits_synced == backlog for r in res)
+        return (fs.reads_under(base, "metadata"),
+                fs.reads_under(base, ".hoodie"))
+
+    assert drain_reads(16) == drain_reads(4)
+
+
+def test_per_commit_path_rereads_and_transaction_does_not():
+    """The seed per-commit path re-reads target state every commit; the
+    transactional path reads it once — the mechanism behind the speedup."""
+    reads = {}
+    for label, txn in (("per-commit", False), ("transactional", True)):
+        fs = CountingFS()
+        base, t = _mk_table(fs, "delta", 4)
+        cfg = _cfg([base], "delta", ["iceberg"], transactionalTargets=txn)
+        run_sync(cfg, fs)
+        for i in range(8):
+            t.append({"k": np.array([100 + i], np.int64),
+                      "part": np.array(["p1"])})
+        fs.reset()
+        res = run_sync(cfg, fs)
+        assert res[0].ok and res[0].commits_synced == 8
+        reads[label] = fs.reads_under(base, "metadata")
+    assert reads["transactional"] < reads["per-commit"] / 2, reads
+
+
+# ------------------------------------------------ coalescing / equivalence
+def _scenario(fs, src):
+    """Deterministic source: 3 base commits + a backlog containing appends,
+    a delete, and a schema evolution (then a write in the new schema)."""
+    base, t = _mk_table(fs, src, 3)
+    return base, t
+
+
+def _backlog(t):
+    new = []
+    new.append(t.append({"k": np.array([50, 51], np.int64),
+                         "part": np.array(["p0", "p1"])}))
+    new.append(t.delete_where(Predicate("k", "==", 1)))
+    new.append(t.evolve_schema(SCHEMA.add_field(Field("extra", "float64"))))
+    new.append(t.append({"k": np.array([60], np.int64),
+                         "part": np.array(["p1"]),
+                         "extra": np.array([2.5])}))
+    return new
+
+
+@pytest.mark.parametrize("src", ALL)
+def test_coalesced_drain_matches_per_commit_end_state(src):
+    """FULL bootstrap + (appends, delete, schema evolution) backlog, drained
+    three ways — per-commit, transactional, coalesced — all land every
+    target on the source's exact logical state."""
+    targets = [f for f in ALL if f != src]
+    states = {}
+    for label, kw in (("per-commit", {"transactionalTargets": False}),
+                      ("transactional", {}),
+                      ("coalesced", {"coalesceIncremental": True})):
+        fs = LocalFS()
+        base, t = _scenario(fs, src)
+        cfg = _cfg([base], src, targets, **kw)
+        run_sync(cfg, fs)
+        new = _backlog(t)
+        res = run_sync(cfg, fs)
+        assert all(r.ok and r.mode == "INCREMENTAL" for r in res), (label, res)
+        assert all(r.commits_synced == len(new) for r in res)
+        if label == "coalesced":
+            assert all(r.target_commits == 1 for r in res)
+        else:
+            assert all(r.target_commits == len(new) for r in res)
+        want_rows = sorted(t.read_all()["k"].tolist())
+        want_schema = [(f.name, f.type) for f in t.state().schema.fields]
+        src_state = t.state()
+        for tf in targets:
+            tt = LakeTable.open(fs, base, tf)
+            st = tt.state()
+            assert sorted(tt.read_all()["k"].tolist()) == want_rows, (label, tf)
+            assert [(f.name, f.type) for f in st.schema.fields] == \
+                want_schema, (label, tf)
+            assert set(st.files) == set(src_state.files), (label, tf)
+            for p, f in st.files.items():   # stats carried through the fold
+                assert f.record_count == src_state.files[p].record_count
+                assert {k: (v.min, v.max) for k, v in f.column_stats.items()} \
+                    == {k: (v.min, v.max) for k, v in
+                        src_state.files[p].column_stats.items()}, (label, tf, p)
+        # idempotence: all targets report the source head as their token
+        res2 = run_sync(_cfg([base], src, targets), fs)
+        assert all(r.mode == "SKIP" for r in res2), (label, res2)
+        states[label] = want_rows
+    assert states["per-commit"] == states["transactional"] == \
+        states["coalesced"]
+
+
+def test_coalesced_commit_preserves_lineage():
+    fs = LocalFS()
+    base, t = _scenario(fs, "delta")
+    cfg = _cfg([base], "delta", ["iceberg", "hudi"], coalesceIncremental=True)
+    run_sync(cfg, fs)
+    new = _backlog(t)
+    res = run_sync(cfg, fs)
+    assert all(r.ok and r.target_commits == 1 for r in res)
+    # hudi: lineage in the completed instant's extraMetadata
+    ht = LakeTable.open(fs, base, "hudi").handle
+    _, _, _, info = ht.changes(ht.current_version())
+    assert json.loads(info[LINEAGE_KEY]) == new
+    assert info[TOKEN_KEY] == new[-1]
+    # iceberg: lineage in the snapshot summary
+    it = LakeTable.open(fs, base, "iceberg").handle
+    _, _, _, summary = it.changes(it.current_version())
+    assert json.loads(summary[f"xtable.{LINEAGE_KEY}"]) == new
+
+
+def test_max_commits_per_sync_caps_and_resumes():
+    fs = LocalFS()
+    base, t = _mk_table(fs, "delta", 2)
+    run_sync(_cfg([base], "delta", ["hudi"]), fs)
+    new = [t.append({"k": np.array([70 + i], np.int64),
+                     "part": np.array(["p0"])}) for i in range(5)]
+    res = run_sync(_cfg([base], "delta", ["hudi"], maxCommitsPerSync=2), fs)
+    assert res[0].commits_synced == 2
+    assert res[0].source_commit == new[1]     # stopped at the cap
+    res = run_sync(_cfg([base], "delta", ["hudi"]), fs)
+    assert res[0].commits_synced == 3         # continued from the token
+    got = sorted(LakeTable.open(fs, base, "hudi").read_all()["k"].tolist())
+    assert got == sorted(t.read_all()["k"].tolist())
+
+
+# ------------------------------------------------- handle-level transactions
+@pytest.mark.parametrize("fmt", ALL)
+def test_transaction_matches_handle_commits(fmt, fs):
+    """N commits through a transaction == N commits through the handle."""
+    base_a, ta = _mk_table(fs, fmt, 0)
+    base_b, tb = _mk_table(fs, fmt, 0)
+    txn = ta.handle.transaction()
+    for i in range(4):
+        add = chunkfile.DataFileMeta(path=f"data/f{i}.chunk", size_bytes=10,
+                                     record_count=1)
+        txn.commit([add], [], properties={"step": str(i)})
+        tb.handle.commit([add], [], properties={"step": str(i)})
+    txn.close()
+    sa, sb = ta.handle.snapshot(), tb.handle.snapshot()
+    assert set(sa.files) == set(sb.files)
+    assert sa.properties.get("step") == sb.properties.get("step") == "3"
+    assert len(ta.handle.versions()) == len(tb.handle.versions())
+
+
+def test_delta_transaction_writes_checkpoint_at_boundary(fs):
+    """A long transactional drain still maintains delta checkpoints: the
+    file list is materialized once at the boundary (bounded by the
+    interval), then tracked in memory."""
+    base, t = _mk_table(fs, "delta", 0)
+    txn = t.handle.transaction()
+    for i in range(12):
+        add = chunkfile.DataFileMeta(path=f"data/f{i}.chunk", size_bytes=1,
+                                     record_count=1)
+        txn.commit([add], [], properties={"i": str(i)})
+    txn.close()
+    assert fs.exists(join(base, "_delta_log", f"{10:020d}.checkpoint.json"))
+    assert len(t.handle.snapshot().files) == 12
+    # vacuum the pre-checkpoint log: state still reconstructs exactly
+    for v in range(0, 10):
+        fs.delete(join(base, "_delta_log", f"{v:020d}.json"))
+    st = t.handle.snapshot()
+    assert sorted(st.files) == sorted(f"data/f{i}.chunk" for i in range(12))
+    assert st.properties["i"] == "11"
+
+
+def test_delta_transaction_survives_concurrent_writer(fs):
+    """A commit landing mid-transaction is detected via put-if-absent; the
+    transaction re-syncs from the tail and lands on the next version."""
+    base, t = _mk_table(fs, "delta", 1)
+    txn = t.handle.transaction()
+    # interloper commits behind the transaction's back
+    t.append({"k": np.array([9], np.int64), "part": np.array(["p0"])})
+    add = chunkfile.DataFileMeta(path="data/x.chunk", size_bytes=1,
+                                 record_count=1)
+    v = txn.commit([add], [], properties={"who": "txn"})
+    st = t.handle.snapshot()
+    assert st.version == v
+    assert "data/x.chunk" in st.files
+    assert len(st.files) == 3        # create-era file + interloper + txn
+
+
+# -------------------------------------------------------- chunkfile footer
+def test_chunk_stats_footer_range_read(tmp_table_path):
+    fs = CountingFS()
+    cols = {"a": np.arange(50_000, dtype=np.int64),
+            "b": np.linspace(-1, 1, 50_000)}
+    meta = chunkfile.write_chunk(fs, tmp_table_path, "d/x.chunk", cols)
+    fs.reset()
+    nrows, stats = chunkfile.read_chunk_stats(fs, tmp_table_path, "d/x.chunk")
+    assert nrows == 50_000
+    assert stats["a"].min == 0 and stats["a"].max == 49_999
+    assert stats["b"].min == -1.0 and stats["b"].max == 1.0
+    assert stats == meta.column_stats
+    # the column data was never fetched: no whole-object read, and the two
+    # ranged reads (trailer + footer) cover a tiny fraction of the object
+    full = f"{tmp_table_path}/d/x.chunk"
+    assert full not in fs.reads
+    assert fs.range_reads[full] == 2
+    assert fs.size(full) > 100 * 1024
+
+
+def test_chunk_roundtrip_with_footer(fs, tmp_table_path):
+    cols = {"a": np.arange(10, dtype=np.int64),
+            "s": np.array(["x", "y"] * 5)}
+    chunkfile.write_chunk(fs, tmp_table_path, "x.chunk", cols,
+                          extra={"shard": "0/4"}, compress=True)
+    back, extra = chunkfile.read_chunk(fs, tmp_table_path, "x.chunk")
+    np.testing.assert_array_equal(back["a"], cols["a"])
+    np.testing.assert_array_equal(back["s"], cols["s"])
+    assert extra == {"shard": "0/4"}
+    nrows, stats = chunkfile.read_chunk_stats(fs, tmp_table_path, "x.chunk")
+    assert nrows == 10 and stats["a"].max == 9
+
+
+def test_chunkfile_v1_clearly_rejected(fs, tmp_table_path):
+    """Old-layout files (stats inline, no footer) fail with a version error,
+    not a garbage footer-offset parse."""
+    fs.write_bytes(join(tmp_table_path, "old.chunk"),
+                   b"CHK1" + b"\x81\xa1a\x01" * 8 + b"CHK1")
+    with pytest.raises(ValueError, match="v1"):
+        chunkfile.read_chunk_stats(fs, tmp_table_path, "old.chunk")
+    with pytest.raises(ValueError, match="v1"):
+        chunkfile.read_chunk(fs, tmp_table_path, "old.chunk")
+    # and a truncated object fails with a chunkfile error, not an OSError
+    fs.write_bytes(join(tmp_table_path, "tiny.chunk"), b"CHK2")
+    with pytest.raises(ValueError, match="truncated"):
+        chunkfile.read_chunk_stats(fs, tmp_table_path, "tiny.chunk")
+
+
+# ------------------------------------------------- hudi extraMetadata codec
+def test_hudi_extrametadata_roundtrip_exact(fs):
+    """Values round-trip through the shared codec — including strings that
+    start with a quote, which the old startswith('\"') heuristic mangled."""
+    base, t = _mk_table(fs, "hudi", 1)
+    tricky = {"plain": "value",
+              "quoted": '"looks like json but is a string',
+              "jsonish": '["not", "a", "list"]'}
+    t.handle.commit([], [], extra_meta=tricky, operation="meta")
+    em = t.handle.latest_extra_metadata()
+    for k, v in tricky.items():
+        assert em[k] == v, k
+    _, _, _, info = t.handle.changes(t.handle.current_version())
+    for k, v in tricky.items():
+        assert info[k] == v, k
