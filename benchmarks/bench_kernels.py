@@ -8,8 +8,13 @@ import time
 import jax
 import jax.numpy as jnp
 
+# --quick smoke mode (set by benchmarks.run): single timed iteration
+QUICK = False
+
 
 def _time(fn, *args, iters=3):
+    if QUICK:
+        iters = 1
     fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
         fn(*args).block_until_ready()
     t0 = time.perf_counter()

@@ -7,7 +7,10 @@ machine-readable ``BENCH_xtable.json`` (``{"rows": [{name, us, derived}]}``)
 so the perf trajectory can be tracked across PRs.
 
 ``--filter SUBSTR`` runs only the benchmark functions whose name contains
-SUBSTR (e.g. ``--filter drain``).  ``--out PATH`` moves the JSON artifact.
+SUBSTR (e.g. ``--filter drain``).  ``--quick`` is the CI smoke mode: every
+sweep shrinks to its smallest shape so the whole harness proves itself in
+seconds (results go to ``BENCH_xtable.quick.json`` — a smoke run never
+clobbers the full record).  ``--out PATH`` moves the JSON artifact.
 The roofline table (per arch x shape x mesh) is produced separately by
 ``repro.launch.dryrun`` + ``repro.launch.roofline`` from compiled artifacts.
 """
@@ -22,17 +25,26 @@ def main(argv=None) -> None:
     ap.add_argument("--filter", default="",
                     help="only run benchmark functions whose name contains "
                          "this substring")
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke mode: minimal sweep sizes, smallest tables")
     ap.add_argument("--out", default=None,
                     help="where to write the machine-readable results "
-                         "(default: BENCH_xtable.json, or "
-                         "BENCH_xtable.partial.json for a --filter run so a "
-                         "partial sweep never clobbers the full record)")
+                         "(default: BENCH_xtable.json; a --filter or "
+                         "--quick run writes BENCH_xtable.partial.json / "
+                         "BENCH_xtable.quick.json so a partial sweep never "
+                         "clobbers the full record)")
     args = ap.parse_args(argv)
     if args.out is None:
-        args.out = ("BENCH_xtable.partial.json" if args.filter
+        args.out = ("BENCH_xtable.quick.json" if args.quick
+                    else "BENCH_xtable.partial.json" if args.filter
                     else "BENCH_xtable.json")
 
     from benchmarks import bench_kernels, bench_xtable
+
+    if args.quick:
+        for mod in (bench_xtable, bench_kernels):
+            if hasattr(mod, "QUICK"):
+                mod.QUICK = True
 
     rows = []
 

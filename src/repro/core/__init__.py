@@ -7,7 +7,7 @@ explicit plan -> shared-metadata-cache -> concurrent-execute pipeline (see
 facade with persisted state, caching, and telemetry).
 """
 
-from repro.core.config import DatasetConfig, SyncConfig
+from repro.core.config import DatasetConfig, StorageOptions, SyncConfig
 from repro.core.executor import SyncExecutor
 from repro.core.ir import (InternalDataFile, InternalSnapshot, InternalTable,
                            TableChange, fold_changes)
@@ -18,7 +18,7 @@ from repro.core.sync import SyncResult, XTableSyncer, run_sync
 from repro.core.targets import make_target
 from repro.core.telemetry import Telemetry
 
-__all__ = ["DatasetConfig", "SyncConfig", "InternalDataFile",
+__all__ = ["DatasetConfig", "StorageOptions", "SyncConfig", "InternalDataFile",
            "InternalSnapshot", "InternalTable", "TableChange", "fold_changes",
            "make_source", "make_target", "run_sync", "SyncResult",
            "XTableSyncer", "Telemetry", "SyncPlan", "SyncPlanner", "SyncUnit",

@@ -20,13 +20,22 @@ Accepts YAML text, a file path, or a plain dict.  Optional knobs:
   single net target commit (freshness over 1:1 history fidelity).
 * ``maxCommitsPerSync`` (default unlimited) — cap the commits one run
   applies; the next run continues from the recorded sync token.
+* ``storage`` (default local, no injection) — storage-backend behavior:
+  any of ``rttMs`` / ``faultRate`` / ``ambiguousPutRate`` wraps the backend
+  in a simulated object store; ``pipelineDepth`` / ``seed`` shape that
+  simulation (honored on ``s3sim://`` even with no injection knobs set);
+  ``retry: {maxAttempts, baseDelayMs, maxDelayMs}`` tunes the
+  exponential-backoff retry layer.  The backend itself comes from the
+  dataset URI scheme (``file://`` / ``mem://`` / ``s3sim://`` / plain
+  path) via the storage registry.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-from repro.lst.fs import strip_scheme
+from repro.lst.storage import (RetryPolicy, StorageProfile, layer_fs, make_fs,
+                               resolve_uri, scheme_of)
 
 KNOWN_FORMATS = ("delta", "iceberg", "hudi")
 
@@ -38,11 +47,53 @@ class DatasetConfig:
 
     @property
     def path(self) -> str:
-        return strip_scheme(self.table_base_path)
+        # registry-based resolution keeps the authority/bucket component,
+        # so two buckets with the same key path cannot collide
+        return resolve_uri(self.table_base_path)
 
     @property
     def name(self) -> str:
         return self.table_name or self.path.rstrip("/").rsplit("/", 1)[-1]
+
+
+@dataclass(frozen=True)
+class StorageOptions:
+    """Storage-backend behavior: fault/latency injection + retry policy."""
+    rtt_ms: float = 0.0
+    fault_rate: float = 0.0
+    ambiguous_put_rate: float = 0.0
+    pipeline_depth: int = 16
+    seed: int = 0
+    retry_max_attempts: int = 5
+    retry_base_delay_ms: float = 10.0
+    retry_max_delay_ms: float = 1000.0
+
+    def profile(self) -> StorageProfile | None:
+        """A StorageProfile when any injection knob is set, else None."""
+        if self.rtt_ms or self.fault_rate or self.ambiguous_put_rate:
+            return StorageProfile(
+                rtt_ms=self.rtt_ms, fault_rate=self.fault_rate,
+                ambiguous_put_rate=self.ambiguous_put_rate,
+                pipeline_depth=self.pipeline_depth, seed=self.seed)
+        return None
+
+    def retry_policy(self) -> RetryPolicy:
+        return RetryPolicy(max_attempts=self.retry_max_attempts,
+                           base_delay_s=self.retry_base_delay_ms / 1000.0,
+                           max_delay_s=self.retry_max_delay_ms / 1000.0)
+
+    @staticmethod
+    def from_dict(d: dict) -> "StorageOptions":
+        r = d.get("retry", {})
+        return StorageOptions(
+            rtt_ms=float(d.get("rttMs", 0.0)),
+            fault_rate=float(d.get("faultRate", 0.0)),
+            ambiguous_put_rate=float(d.get("ambiguousPutRate", 0.0)),
+            pipeline_depth=int(d.get("pipelineDepth", 16)),
+            seed=int(d.get("seed", 0)),
+            retry_max_attempts=int(r.get("maxAttempts", 5)),
+            retry_base_delay_ms=float(r.get("baseDelayMs", 10.0)),
+            retry_max_delay_ms=float(r.get("maxDelayMs", 1000.0)))
 
 
 @dataclass(frozen=True)
@@ -61,6 +112,8 @@ class SyncConfig:
     # cap how many backlog commits one sync run applies (None = all); the
     # target advances to the cap and the next run continues from there
     max_commits_per_sync: int | None = None
+    # storage-backend behavior (latency/fault injection, retry policy)
+    storage: StorageOptions = field(default_factory=StorageOptions)
 
     def __post_init__(self):
         for f in (self.source_format, *self.target_formats):
@@ -85,7 +138,40 @@ class SyncConfig:
             incremental=bool(d.get("incremental", True)),
             transactional_targets=bool(d.get("transactionalTargets", True)),
             coalesce_incremental=bool(d.get("coalesceIncremental", False)),
-            max_commits_per_sync=int(mcps) if mcps is not None else None)
+            max_commits_per_sync=int(mcps) if mcps is not None else None,
+            storage=StorageOptions.from_dict(d.get("storage", {})))
+
+    def build_fs(self, telemetry=None):
+        """Construct the storage stack this config describes.
+
+        The backend comes from the dataset URI scheme through the registry
+        (all datasets of one config must agree on a scheme — they share one
+        FileSystem for the run); it is then layered per ``storage``:
+        latency/fault simulation when injection knobs are set, the
+        exponential-backoff retry layer, and the instrumented wrapper
+        feeding ``telemetry`` request/byte counters.
+        """
+        schemes = {scheme_of(ds.table_base_path) for ds in self.datasets}
+        schemes.discard(None)       # plain paths ride the local backend
+        if len(schemes) > 1:
+            raise ValueError(f"datasets span multiple storage schemes: "
+                             f"{sorted(schemes)}")
+        scheme = schemes.pop() if schemes else "file"
+        profile = self.storage.profile()
+        if scheme == "s3sim":
+            # the s3sim factory owns the simulation wrapper; hand it every
+            # simulation knob (pipelineDepth/seed included, even with no
+            # fault/latency injection) instead of double-wrapping
+            from dataclasses import asdict
+            base = make_fs("s3sim", **asdict(profile or StorageProfile(
+                pipeline_depth=self.storage.pipeline_depth,
+                seed=self.storage.seed)))
+            profile = None
+        else:
+            base = make_fs(scheme)
+        return layer_fs(base, profile=profile,
+                        retry=self.storage.retry_policy(),
+                        telemetry=telemetry)
 
     @staticmethod
     def from_yaml(text: str) -> "SyncConfig":

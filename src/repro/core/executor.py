@@ -44,6 +44,8 @@ class SyncResult:
     error: str | None = None
     target_commits: int = 0    # target commits written (< commits_synced when
                                # the backlog was coalesced)
+    storage_ops: dict | None = None  # per-unit storage request census (only
+                                     # when the run's fs is instrumented)
 
     @property
     def ok(self) -> bool:
@@ -80,14 +82,23 @@ class SyncExecutor:
 
     def execute_unit(self, unit: SyncUnit) -> SyncResult:
         t0 = time.perf_counter()
+        # an instrumented fs tracks per-thread request counters, and a unit
+        # runs entirely on this thread — scope them to get the unit's exact
+        # storage census (the O(1)-target-reads guarantee is pinned on it)
+        scoped = getattr(self.fs, "scoped", None)
+        scope_cm = scoped() if scoped is not None else nullcontext()
         try:
-            r = self._run_unit(unit)
+            with scope_cm as scope:
+                r = self._run_unit(unit)
         except Exception as e:  # a failing target must not poison others
             self.telemetry.bump("sync.errors")
             self.telemetry.record(unit.dataset, unit.target_format,
                                   "error", str(e))
             r = SyncResult(unit.dataset, unit.target_format, ERROR,
                            source_commit=unit.source_head, error=str(e))
+        else:
+            if scope is not None:
+                r.storage_ops = scope.as_dict()
         r.elapsed_s = time.perf_counter() - t0
         return r
 

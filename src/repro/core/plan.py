@@ -23,7 +23,6 @@ from repro.core.metadata_cache import MetadataCache
 from repro.core.sources import make_source
 from repro.core.targets import make_target
 from repro.core.telemetry import Telemetry
-from repro.lst.fs import LocalFS
 
 FULL = "FULL"
 INCREMENTAL = "INCREMENTAL"
@@ -82,9 +81,9 @@ class SyncPlanner:
                  cache: MetadataCache | None = None,
                  telemetry: Telemetry | None = None):
         self.config = config
-        self.fs = fs or LocalFS()
-        self.cache = cache or MetadataCache(self.fs)
         self.telemetry = telemetry or Telemetry()
+        self.fs = fs or config.build_fs(self.telemetry)
+        self.cache = cache or MetadataCache(self.fs)
         self.writers: dict = {}
 
     # ------------------------------------------------------------------ api

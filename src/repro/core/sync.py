@@ -36,7 +36,6 @@ from repro.core.executor import SyncExecutor, SyncResult
 from repro.core.metadata_cache import MetadataCache
 from repro.core.plan import SyncPlan, SyncPlanner
 from repro.core.telemetry import Telemetry
-from repro.lst.fs import LocalFS
 
 __all__ = ["SyncResult", "XTableSyncer", "run_sync"]
 
@@ -52,7 +51,9 @@ class XTableSyncer:
     max_commits_per_sync: int | None = None
 
     def __post_init__(self):
-        self.fs = self.fs or LocalFS()
+        # no explicit fs -> build the config's storage stack (scheme-registry
+        # backend + optional simulation + retry + telemetry instrumentation)
+        self.fs = self.fs or self.config.build_fs(self.telemetry)
         self.cache = self.cache or MetadataCache(self.fs)
         overrides = {}
         if self.coalesce is not None:

@@ -229,7 +229,7 @@ class HudiTarget(_HandleTarget):
         if self._schema is None:
             em = self.handle.latest_extra_metadata()
             s = em.get("schema") or \
-                self.handle._read_props()["hoodie.table.create.schema"]
+                self.handle.table_properties()["hoodie.table.create.schema"]
             self._schema = schema_from_avro(s)
         return self._schema
 

@@ -2,8 +2,11 @@
 
 Implements the storage layer the paper's translator operates over:
 
-* ``fs``        — pluggable filesystem with object-store semantics (put-if-absent
-                  atomic creates are the commit primitive, as on ABFS/S3/GCS).
+* ``storage``   — pluggable storage backends with object-store semantics
+                  (put-if-absent atomic creates are the commit primitive, as
+                  on ABFS/S3/GCS; batched metadata fetch; latency/fault
+                  simulation; retry policy; scheme registry).  ``fs`` is the
+                  back-compat shim over it.
 * ``chunkfile`` — the immutable columnar data-file format (plays the role Parquet
                   plays in the paper: column chunks + footer statistics).
 * ``delta``     — Delta-Lake-style JSON action log (``_delta_log/NNNN.json``).
@@ -13,12 +16,17 @@ Implements the storage layer the paper's translator operates over:
                   copy-on-write delete, time travel, over any of the formats.
 """
 
-from repro.lst.fs import LocalFS, FileSystem
-from repro.lst.chunkfile import write_chunk, read_chunk, read_chunk_stats, DataFileMeta
+from repro.lst.storage import (FileSystem, LocalFS, MemoryFS, RetryingFS,
+                               RetryPolicy, SimulatedObjectStore,
+                               StorageProfile, make_fs)
+from repro.lst.chunkfile import (write_chunk, read_chunk, read_chunk_stats,
+                                 read_chunks_stats, DataFileMeta)
 from repro.lst import delta, iceberg, hudi
 from repro.lst.table import LakeTable, FORMATS
 
 __all__ = [
-    "LocalFS", "FileSystem", "write_chunk", "read_chunk", "read_chunk_stats",
+    "LocalFS", "MemoryFS", "SimulatedObjectStore", "StorageProfile",
+    "RetryingFS", "RetryPolicy", "FileSystem", "make_fs",
+    "write_chunk", "read_chunk", "read_chunk_stats", "read_chunks_stats",
     "DataFileMeta", "delta", "iceberg", "hudi", "LakeTable", "FORMATS",
 ]

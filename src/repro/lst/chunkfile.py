@@ -199,6 +199,41 @@ def read_chunk(fs, base_path: str, rel_path: str) -> tuple[dict, dict]:
     return cols, body.get("extra", {})
 
 
+def read_chunks_stats(fs, base_path: str,
+                      rel_paths: list[str]) -> list[tuple[int, dict]]:
+    """Batched ``read_chunk_stats`` over many files: two pipelined rounds of
+    ranged reads (all trailers, then all footers) via the FileSystem's batch
+    API, instead of (size + 2 ranged reads) sequential round trips per file.
+
+    Round 1 suffix-reads each trailer (no ``size`` request needed); round 2
+    reads from each footer offset to end-of-object and strips the trailer —
+    so N files cost ~2 batch round trips on a pipelined object store.
+    """
+    from repro.lst.storage.base import fetch_many_ranges
+
+    fulls = [f"{base_path}/{p}" for p in rel_paths]
+    tails = fetch_many_ranges(
+        fs, [(f, -_TRAILER_LEN, _TRAILER_LEN) for f in fulls])
+    footer_offs = []
+    for p, tail in zip(fulls, tails):
+        if len(tail) < _TRAILER_LEN:
+            raise ValueError(f"not a chunkfile (truncated): {p}")
+        _check_magic(tail[-4:])
+        (off,) = struct.unpack("<Q", tail[:8])
+        footer_offs.append(off)
+    blobs = fetch_many_ranges(
+        fs, [(f, off, -1) for f, off in zip(fulls, footer_offs)])
+    out = []
+    for p, blob in zip(fulls, blobs):
+        if len(blob) <= _TRAILER_LEN:
+            raise ValueError(f"not a chunkfile (bad footer offset): {p}")
+        footer = msgpack.unpackb(blob[:-_TRAILER_LEN], strict_map_key=False)
+        out.append((footer["nrows"],
+                    {k: ColumnStats.from_dict(v)
+                     for k, v in footer["stats"].items()}))
+    return out
+
+
 def read_chunk_stats(fs, base_path: str, rel_path: str) -> tuple[int, dict]:
     """Read only nrows + stats via two ranged reads (trailer, then footer);
     the column data is never fetched."""

@@ -1,115 +1,36 @@
-"""Pluggable filesystem with object-store semantics.
+"""Back-compat shim over :mod:`repro.lst.storage`.
 
-The paper's XTable connects to data lakes through a pluggable file system
-(ABFS in Listing 2).  The property every LST commit protocol relies on is an
-*atomic put-if-absent*: two writers racing to create the same object must see
-exactly one winner.  ``LocalFS`` provides that via ``O_CREAT|O_EXCL``; any
-object store with conditional puts (ABFS ETag, S3 If-None-Match, GCS
-generation preconditions) can implement the same five methods.
+The storage layer grew from this single module into the ``lst/storage/``
+subsystem (protocol + local / memory / simulated backends, retry policy,
+instrumentation, URI-scheme registry).  Existing imports keep working from
+here; new code should import from ``repro.lst.storage``.
 """
 
 from __future__ import annotations
 
-import os
-import threading
-from typing import Iterable, Protocol, runtime_checkable
+from repro.lst.storage import (FileSystem, InstrumentedFS, LocalFS, MemoryFS,
+                               PutIfAbsentError, RetryingFS, RetryPolicy,
+                               SequentialBatchMixin, SimulatedObjectStore,
+                               StorageProfile, StorageRetryExhausted,
+                               TransientStorageError, fetch_many,
+                               fetch_many_ranges, join, make_fs, resolve_uri,
+                               scheme_of, split_uri)
 
-
-class PutIfAbsentError(FileExistsError):
-    """Raised when an exclusive create loses the race (commit conflict)."""
-
-
-@runtime_checkable
-class FileSystem(Protocol):
-    def read_bytes(self, path: str) -> bytes: ...
-    def read_bytes_range(self, path: str, offset: int, length: int) -> bytes: ...
-    def write_bytes(self, path: str, data: bytes, *, overwrite: bool = False) -> None: ...
-    def exists(self, path: str) -> bool: ...
-    def list_dir(self, path: str) -> list[str]: ...
-    def size(self, path: str) -> int: ...
-    def delete(self, path: str) -> None: ...
-
-
-def join(*parts: str) -> str:
-    """Join path segments with '/' (object-store style, no os.sep surprises)."""
-    cleaned = [p.strip("/") if i else p.rstrip("/") for i, p in enumerate(parts) if p]
-    return "/".join(cleaned)
-
-
-class LocalFS:
-    """POSIX-backed FileSystem with object-store commit semantics.
-
-    Writes are *atomic at the object level*: data is staged to a temp file and
-    linked into place, so readers never observe partial objects — mirroring
-    object-store single-shot PUTs (this is what makes LST metadata commits
-    atomic, per §2 of the paper).
-    """
-
-    def __init__(self, *, fsync: bool = True) -> None:
-        """``fsync=False`` skips the per-object fsync: atomicity (staged
-        temp file + atomic link) is unchanged, only crash durability is
-        relaxed — the knob benchmarks use so metadata-translation work is
-        measured instead of disk flushes (object stores own durability and
-        expose no fsync)."""
-        self._lock = threading.Lock()
-        self._fsync = fsync
-
-    # -- reads ------------------------------------------------------------
-    def read_bytes(self, path: str) -> bytes:
-        with open(path, "rb") as f:
-            return f.read()
-
-    def read_bytes_range(self, path: str, offset: int, length: int) -> bytes:
-        """Ranged GET (object-store style): ``length`` bytes from ``offset``."""
-        with open(path, "rb") as f:
-            f.seek(offset)
-            return f.read(length)
-
-    def exists(self, path: str) -> bool:
-        return os.path.exists(path)
-
-    def list_dir(self, path: str) -> list[str]:
-        try:
-            return sorted(os.listdir(path))
-        except FileNotFoundError:
-            return []
-
-    def size(self, path: str) -> int:
-        return os.stat(path).st_size
-
-    # -- writes -----------------------------------------------------------
-    def write_bytes(self, path: str, data: bytes, *, overwrite: bool = False) -> None:
-        os.makedirs(os.path.dirname(path), exist_ok=True)
-        tmp = f"{path}.tmp.{os.getpid()}.{threading.get_ident()}"
-        with open(tmp, "wb") as f:
-            f.write(data)
-            f.flush()
-            if self._fsync:
-                os.fsync(f.fileno())
-        if overwrite:
-            os.replace(tmp, path)  # atomic swap
-            return
-        # put-if-absent: hardlink fails with EEXIST if somebody else won.
-        try:
-            os.link(tmp, path)
-        except FileExistsError:
-            raise PutIfAbsentError(path)
-        finally:
-            os.unlink(tmp)
-
-    def delete(self, path: str) -> None:
-        try:
-            os.unlink(path)
-        except FileNotFoundError:
-            pass
+__all__ = [
+    "FileSystem", "LocalFS", "MemoryFS", "SimulatedObjectStore",
+    "StorageProfile", "RetryingFS", "RetryPolicy", "InstrumentedFS",
+    "PutIfAbsentError", "TransientStorageError", "StorageRetryExhausted",
+    "SequentialBatchMixin", "fetch_many", "fetch_many_ranges", "join",
+    "make_fs", "resolve_uri", "scheme_of", "split_uri", "strip_scheme",
+]
 
 
 def strip_scheme(path: str) -> str:
-    """Accept abfs://c@a.dfs.core.windows.net/p, file:///p, or plain paths."""
-    if "://" in path:
-        rest = path.split("://", 1)[1]
-        # drop the authority component for URI-style paths
-        if "/" in rest:
-            rest = rest.split("/", 1)[1]
-        return "/" + rest.lstrip("/")
-    return path
+    """Deprecated alias of :func:`repro.lst.storage.resolve_uri`.
+
+    The old implementation dropped the authority for every scheme, so two
+    buckets with the same key path collided; resolution now goes through
+    the scheme registry, which keeps the bucket/container as the leading
+    path component for object-store schemes.
+    """
+    return resolve_uri(path)

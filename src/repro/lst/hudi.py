@@ -23,7 +23,7 @@ import threading
 import time
 
 from repro.lst.chunkfile import ColumnStats, DataFileMeta
-from repro.lst.fs import PutIfAbsentError, join
+from repro.lst.storage import PutIfAbsentError, fetch_many, join
 from repro.lst.schema import (CommitEntry, Field, PartitionSpec, Schema,
                               TableState)
 
@@ -199,6 +199,17 @@ class HudiTable:
         return json.loads(self.fs.read_bytes(
             join(self.base, HOODIE_DIR, f"{ts}.{action}")))
 
+    def _instant_payloads_many(
+            self, instants: list[tuple[str, str]]) -> dict[tuple, dict]:
+        """Batched fetch of completed-instant payloads keyed by
+        (timestamp, action): the independent GETs go through ``read_many``
+        so a timeline replay on a high-RTT object store is pipelined, not
+        one RTT per instant."""
+        blobs = fetch_many(
+            self.fs, [join(self.base, HOODIE_DIR, f"{ts}.{a}")
+                      for ts, a in instants])
+        return {key: json.loads(raw) for key, raw in zip(instants, blobs)}
+
     # ----------------------------------------------------------------- state
     def current_version(self) -> str:
         tl = self._timeline()
@@ -213,10 +224,10 @@ class HudiTable:
         files: dict[str, DataFileMeta] = {}
         schema = schema_from_avro(props["hoodie.table.create.schema"])
         ts_ms = 0
-        for ts, action in self._timeline():
-            if ts > target:
-                break
-            payload = self._instant_payload(ts, action)
+        upto = [(ts, a) for ts, a in self._timeline() if ts <= target]
+        payloads = self._instant_payloads_many(upto)
+        for ts, action in upto:
+            payload = payloads[(ts, action)]
             for paths in payload.get("partitionToReplacedFilePaths", {}).values():
                 for p in paths:
                     files.pop(p, None)
@@ -282,9 +293,10 @@ class HudiTable:
             ts_ms = seed.timestamp_ms
         elif since is not None:
             base = None
+        payloads = self._instant_payloads_many(timeline)
         entries = []
         for ts, action in timeline:
-            payload = self._instant_payload(ts, action)
+            payload = payloads[(ts, action)]
             adds = [_file_from_stat(w) for stats in
                     payload.get("partitionToWriteStats", {}).values()
                     for w in stats]
@@ -303,6 +315,12 @@ class HudiTable:
     def properties(self) -> dict:
         props = self._read_props()
         return {k: v for k, v in props.items() if not k.startswith("hoodie.")}
+
+    def table_properties(self) -> dict:
+        """The full ``hoodie.properties`` map, ``hoodie.*`` keys included
+        (``properties()`` filters those out) — the public accessor for
+        table-level facts like ``hoodie.table.create.schema``."""
+        return dict(self._read_props())
 
     def latest_extra_metadata(self) -> dict:
         tl = self._timeline()

@@ -22,7 +22,7 @@ import time
 import uuid
 
 from repro.lst.chunkfile import ColumnStats, DataFileMeta
-from repro.lst.fs import PutIfAbsentError, join
+from repro.lst.storage import PutIfAbsentError, fetch_many, join
 from repro.lst.schema import (CommitEntry, Field, PartitionField,
                               PartitionSpec, Schema, TableState)
 
@@ -171,6 +171,12 @@ class IcebergTable:
     def _read_manifest(self, path: str) -> list[dict]:
         return json.loads(self.fs.read_bytes(join(self.base, path)))["entries"]
 
+    def _read_manifests_many(self, paths: list[str]) -> dict[str, list[dict]]:
+        """Batched manifest fetch: independent GETs pipelined via
+        ``read_many`` (one round of round trips, not one per manifest)."""
+        blobs = fetch_many(self.fs, [join(self.base, p) for p in paths])
+        return {p: json.loads(raw)["entries"] for p, raw in zip(paths, blobs)}
+
     def _write_manifest(self, name: str, entries: list[dict]) -> str:
         rel = join(META_DIR, name)
         self.fs.write_bytes(join(self.base, rel),
@@ -198,8 +204,11 @@ class IcebergTable:
 
     def _live_files(self, meta: dict, snap: dict) -> dict:
         files: dict[str, DataFileMeta] = {}
-        for m in self._read_manifest_list(snap["manifest-list"]):
-            for e in self._read_manifest(m["manifest-path"]):
+        manifests = self._read_manifest_list(snap["manifest-list"])
+        by_path = self._read_manifests_many(
+            [m["manifest-path"] for m in manifests])
+        for m in manifests:
+            for e in by_path[m["manifest-path"]]:
                 if e["status"] != DELETED:
                     f = _file_from_entry(e)
                     files[f.path] = f
@@ -229,8 +238,11 @@ class IcebergTable:
         _, meta = self._read_metadata()
         snap = self._snapshot_rec(meta, int(version))
         adds, removes = [], []
-        for m in self._read_manifest_list(snap["manifest-list"]):
-            for e in self._read_manifest(m["manifest-path"]):
+        manifests = self._read_manifest_list(snap["manifest-list"])
+        by_path = self._read_manifests_many(
+            [m["manifest-path"] for m in manifests])
+        for m in manifests:
+            for e in by_path[m["manifest-path"]]:
                 if e["snapshot-id"] != int(version):
                     continue
                 if e["status"] == ADDED:
@@ -275,23 +287,33 @@ class IcebergTable:
             base = None
         elif since is not None:   # since == "-1": tail == whole chain
             base = None
-        manifest_memo: dict[str, list[dict]] = {}
 
-        def read_manifest(path: str) -> list[dict]:
-            if path not in manifest_memo:
-                manifest_memo[path] = self._read_manifest(path)
-            return manifest_memo[path]
+        # two pipelined fetch rounds instead of one RTT per metadata object:
+        # all manifest-lists at once, then every unique manifest exactly once
+        # (manifest *reuse* makes the same manifest appear in many lists)
+        ml_blobs = fetch_many(
+            self.fs, [join(self.base, s["manifest-list"]) for s in snaps])
+        ml_by_snap = {s["snapshot-id"]: json.loads(raw)["manifests"]
+                      for s, raw in zip(snaps, ml_blobs)}
+        needed: dict[str, None] = {}
+        for snap in snaps:
+            sid = snap["snapshot-id"]
+            for m in ml_by_snap[sid]:
+                # a snapshot's ADDED/DELETED entries only live in manifests
+                # written at that snapshot; skip reused ones on tail scans
+                if tail_only and m.get("added-snapshot-id") != sid:
+                    continue
+                needed[m["manifest-path"]] = None
+        manifest_memo = self._read_manifests_many(list(needed))
 
         entries = []
         for snap in snaps:
             sid = snap["snapshot-id"]
             adds, removes = [], []
-            for m in self._read_manifest_list(snap["manifest-list"]):
-                # a snapshot's ADDED/DELETED entries only live in manifests
-                # written at that snapshot; skip reused ones on tail scans
+            for m in ml_by_snap[sid]:
                 if tail_only and m.get("added-snapshot-id") != sid:
                     continue
-                for e in read_manifest(m["manifest-path"]):
+                for e in manifest_memo[m["manifest-path"]]:
                     if e["snapshot-id"] != sid:
                         continue
                     if e["status"] == ADDED:
@@ -340,8 +362,11 @@ class IcebergTable:
         manifests: list[dict] = []
         if meta["current-snapshot-id"] != -1:
             parent = self._snapshot_rec(meta, meta["current-snapshot-id"])
-            for m in self._read_manifest_list(parent["manifest-list"]):
-                entries = [e for e in self._read_manifest(m["manifest-path"])
+            parent_list = self._read_manifest_list(parent["manifest-list"])
+            by_path = self._read_manifests_many(
+                [m["manifest-path"] for m in parent_list])
+            for m in parent_list:
+                entries = [e for e in by_path[m["manifest-path"]]
                            if e["status"] != DELETED]
                 if removes and any(e["data-file"]["file-path"] in removes
                                    for e in entries):
@@ -480,6 +505,12 @@ class IcebergTransaction:
 
         # -- carry forward the in-memory manifest list; only manifests that
         #    contain a removed path are opened (memoized) and rewritten
+        if removes:   # open the not-yet-memoized live manifests in one batch
+            missing = [m["manifest-path"] for m in self._parent_manifests()
+                       if (m.get("added-files-count", 0) +
+                           m.get("existing-files-count", 0))
+                       and m["manifest-path"] not in self._manifest_memo]
+            self._manifest_memo.update(self.t._read_manifests_many(missing))
         manifests: list[dict] = []
         for m in self._parent_manifests():
             live = (m.get("added-files-count", 0) +

@@ -1,0 +1,44 @@
+"""Pluggable storage backends with object-store semantics.
+
+The storage subsystem behind every LST handle (ROADMAP "Storage backends"):
+
+* ``base``         — the widened ``FileSystem`` protocol (batch reads,
+                     ranged reads, conditional puts) and the error taxonomy
+                     (``PutIfAbsentError`` / ``TransientStorageError``).
+* ``local``        — POSIX-backed ``LocalFS`` (atomic staged writes).
+* ``memory``       — in-memory ``MemoryFS`` object store.
+* ``simulated``    — ``SimulatedObjectStore`` decorator: per-request RTT,
+                     probabilistic 503s, pipelined batch reads.
+* ``retry``        — ``RetryPolicy`` / ``RetryingFS``: exponential backoff
+                     with a retry-safe put-if-absent.
+* ``instrumented`` — ``InstrumentedFS``: request/byte/retry counters feeding
+                     ``Telemetry``, with per-thread scoping for per-unit
+                     request censuses.
+* ``registry``     — URI-scheme registry: ``make_fs``, ``resolve_uri``,
+                     ``layer_fs`` stack composition.
+"""
+
+from repro.lst.storage.base import (FileSystem, PutIfAbsentError,
+                                    SequentialBatchMixin,
+                                    StorageRetryExhausted,
+                                    TransientStorageError, fetch_many,
+                                    fetch_many_ranges, join)
+from repro.lst.storage.instrumented import InstrumentedFS, StorageStats
+from repro.lst.storage.local import LocalFS
+from repro.lst.storage.memory import MemoryFS
+from repro.lst.storage.registry import (clear_shared_stores, layer_fs,
+                                        make_fs, register_scheme,
+                                        resolve_uri, scheme_of, shared_store,
+                                        split_uri)
+from repro.lst.storage.retry import RetryingFS, RetryPolicy
+from repro.lst.storage.simulated import SimulatedObjectStore, StorageProfile
+
+__all__ = [
+    "FileSystem", "PutIfAbsentError", "TransientStorageError",
+    "StorageRetryExhausted", "SequentialBatchMixin", "fetch_many",
+    "fetch_many_ranges", "join", "LocalFS", "MemoryFS",
+    "SimulatedObjectStore", "StorageProfile", "RetryingFS", "RetryPolicy",
+    "InstrumentedFS", "StorageStats", "make_fs", "register_scheme",
+    "resolve_uri", "scheme_of", "split_uri", "layer_fs", "shared_store",
+    "clear_shared_stores",
+]

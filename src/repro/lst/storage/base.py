@@ -1,0 +1,110 @@
+"""Widened FileSystem protocol + object-store error taxonomy.
+
+The paper's XTable reaches data lakes through a pluggable file system (ABFS
+in Listing 2).  Two properties of real object stores shape this protocol:
+
+* **Atomic put-if-absent** — two writers racing to create the same object
+  must see exactly one winner (ABFS ETag, S3 If-None-Match, GCS generation
+  preconditions).  Every LST commit protocol is built on it; losing the
+  race raises :class:`PutIfAbsentError`.
+* **Per-request latency and transient throttling** — each call is a network
+  round trip that may come back 503 (:class:`TransientStorageError`).
+  Independent metadata fetches must therefore be *batched*
+  (:meth:`FileSystem.read_many` / :meth:`FileSystem.read_many_ranges`) so a
+  log replay is pipelined instead of one RTT per object, and writes must be
+  retried with backoff (see ``retry.py``) in a way that distinguishes
+  "lost the commit race" from "the store hiccuped".
+
+Range semantics (object-store style, mirrors HTTP Range):
+
+* ``offset < 0`` — suffix read: the last ``length`` bytes (``offset`` is
+  ``-length`` by convention, only its sign matters).
+* ``length < 0`` — read from ``offset`` to the end of the object.
+"""
+
+from __future__ import annotations
+
+from typing import Protocol, Sequence, runtime_checkable
+
+
+class PutIfAbsentError(FileExistsError):
+    """Raised when an exclusive create loses the race (commit conflict)."""
+
+
+class TransientStorageError(IOError):
+    """A retryable request failure (503 SlowDown / throttle / timeout).
+
+    The request may or may not have been applied by the store — callers
+    retrying a put-if-absent must treat a subsequent ``PutIfAbsentError``
+    as potentially their own earlier attempt having landed (see
+    ``retry.RetryingFS``).
+    """
+
+
+class StorageRetryExhausted(IOError):
+    """A transiently-failing request did not succeed within the policy."""
+
+
+@runtime_checkable
+class FileSystem(Protocol):
+    def read_bytes(self, path: str) -> bytes: ...
+    def read_bytes_range(self, path: str, offset: int, length: int) -> bytes: ...
+    def read_many(self, paths: Sequence[str]) -> list[bytes]: ...
+    def read_many_ranges(
+        self, requests: Sequence[tuple[str, int, int]]) -> list[bytes]: ...
+    def write_bytes(self, path: str, data: bytes, *, overwrite: bool = False) -> None: ...
+    def exists(self, path: str) -> bool: ...
+    def list_dir(self, path: str) -> list[str]: ...
+    def size(self, path: str) -> int: ...
+    def delete(self, path: str) -> None: ...
+
+
+class SequentialBatchMixin:
+    """Default (unpipelined) batch reads: one request per object, in order.
+
+    Concrete stores whose requests are local memory/disk operations inherit
+    this; the :class:`~repro.lst.storage.simulated.SimulatedObjectStore`
+    overrides both methods with a concurrent fan-out so a batch costs
+    ~ceil(N / pipeline_depth) round trips instead of N.
+    """
+
+    def read_many(self, paths: Sequence[str]) -> list[bytes]:
+        return [self.read_bytes(p) for p in paths]
+
+    def read_many_ranges(
+            self, requests: Sequence[tuple[str, int, int]]) -> list[bytes]:
+        return [self.read_bytes_range(p, off, ln) for p, off, ln in requests]
+
+
+def fetch_many(fs, paths: Sequence[str]) -> list[bytes]:
+    """``fs.read_many`` with a sequential fallback for minimal FS objects.
+
+    The LST handles funnel every independent multi-object fetch through
+    this helper, so any duck-typed FileSystem (test doubles subclassing
+    nothing, foreign implementations) keeps working while batching-capable
+    stores get the pipelined path.
+    """
+    paths = list(paths)
+    if not paths:
+        return []
+    rm = getattr(fs, "read_many", None)
+    if rm is not None:
+        return rm(paths)
+    return [fs.read_bytes(p) for p in paths]
+
+
+def fetch_many_ranges(fs, requests: Sequence[tuple[str, int, int]]) -> list[bytes]:
+    """``fs.read_many_ranges`` with a sequential fallback (see fetch_many)."""
+    requests = list(requests)
+    if not requests:
+        return []
+    rmr = getattr(fs, "read_many_ranges", None)
+    if rmr is not None:
+        return rmr(requests)
+    return [fs.read_bytes_range(p, off, ln) for p, off, ln in requests]
+
+
+def join(*parts: str) -> str:
+    """Join path segments with '/' (object-store style, no os.sep surprises)."""
+    cleaned = [p.strip("/") if i else p.rstrip("/") for i, p in enumerate(parts) if p]
+    return "/".join(cleaned)

@@ -1,0 +1,172 @@
+"""Simulated object store: latency + fault injection over any FileSystem.
+
+Decorator that makes a backing store behave like a remote object store:
+
+* every request pays a configurable round-trip time (``rtt_ms``);
+* requests fail probabilistically with a 503-style
+  :class:`~repro.lst.storage.base.TransientStorageError` — either *before*
+  the operation applies (``fault_rate``, a rejected/throttled request) or,
+  for writes, *after* it applied (``ambiguous_put_rate``, the response was
+  lost on the wire) — the case a retry-safe put-if-absent must disambiguate;
+* batch reads (``read_many`` / ``read_many_ranges``) are pipelined over
+  ``pipeline_depth`` concurrent in-flight requests, so N independent
+  metadata fetches cost ~ceil(N / depth) RTTs instead of N.
+  ``pipeline_depth=1`` degrades to one round trip per object — the
+  comparison arm of ``bench_object_store_sync``.
+
+Fault injection is seeded and lock-protected, so a test run is
+reproducible; ``injected_faults`` / ``requests`` counters expose what the
+simulation actually did.
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Sequence
+
+from repro.lst.storage.base import TransientStorageError
+
+_MAX_POOL = 32
+
+
+def _raise_first(settled: list) -> list[bytes]:
+    for r in settled:
+        if isinstance(r, Exception):
+            raise r
+    return settled
+
+
+@dataclass(frozen=True)
+class StorageProfile:
+    """Behavior knobs for a SimulatedObjectStore."""
+    rtt_ms: float = 0.0            # per-request round-trip time
+    fault_rate: float = 0.0        # P(request rejected before applying)
+    ambiguous_put_rate: float = 0.0  # P(write applies but the response is lost)
+    pipeline_depth: int = 16       # concurrent in-flight batch reads (1 = serial)
+    seed: int = 0
+
+
+class SimulatedObjectStore:
+    """Wrap ``inner`` with object-store latency/fault behavior."""
+
+    def __init__(self, inner, profile: StorageProfile | None = None, **kw):
+        self.inner = inner
+        self.profile = profile or StorageProfile(**kw)
+        if self.profile.pipeline_depth < 1:
+            raise ValueError("pipeline_depth must be >= 1")
+        self._rng = random.Random(self.profile.seed)
+        self._lock = threading.Lock()
+        self._pool: ThreadPoolExecutor | None = None
+        self.requests = 0
+        self.injected_faults = 0
+
+    # -- simulation core ---------------------------------------------------
+    def _roll(self, rate: float) -> bool:
+        if rate <= 0.0:
+            return False
+        with self._lock:
+            hit = self._rng.random() < rate
+            if hit:
+                self.injected_faults += 1
+            return hit
+
+    def _request(self, op: str) -> None:
+        """One round trip: pay the RTT, maybe get throttled (pre-apply)."""
+        with self._lock:
+            self.requests += 1
+        if self.profile.rtt_ms > 0:
+            time.sleep(self.profile.rtt_ms / 1000.0)
+        if self._roll(self.profile.fault_rate):
+            raise TransientStorageError(f"503 SlowDown ({op})")
+
+    def _batch_pool(self, n: int) -> ThreadPoolExecutor:
+        with self._lock:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=min(self.profile.pipeline_depth, _MAX_POOL),
+                    thread_name_prefix="objstore-sim")
+            return self._pool
+
+    def close(self) -> None:
+        """Release the batch-read thread pool (recreated lazily if the
+        store is used again)."""
+        with self._lock:
+            pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.shutdown(wait=False)
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass
+
+    # -- reads ------------------------------------------------------------
+    def read_bytes(self, path: str) -> bytes:
+        self._request("GET")
+        return self.inner.read_bytes(path)
+
+    def read_bytes_range(self, path: str, offset: int, length: int) -> bytes:
+        self._request("GET")
+        return self.inner.read_bytes_range(path, offset, length)
+
+    def read_many(self, paths: Sequence[str]) -> list[bytes]:
+        return _raise_first(self.read_many_settled(paths))
+
+    def read_many_ranges(
+            self, requests: Sequence[tuple[str, int, int]]) -> list[bytes]:
+        return _raise_first(self.read_many_ranges_settled(requests))
+
+    # settled variants: per-item outcomes (bytes | TransientStorageError),
+    # the contract a retry layer needs to refetch ONLY the throttled items
+    # of a batch instead of replaying the whole fan-out
+    def read_many_settled(self, paths: Sequence[str]) -> list:
+        return self._fan_out([(p, None) for p in paths])
+
+    def read_many_ranges_settled(
+            self, requests: Sequence[tuple[str, int, int]]) -> list:
+        return self._fan_out([(p, (off, ln)) for p, off, ln in requests])
+
+    def _fan_out(self, items: list) -> list:
+        def one(item):
+            path, rng = item
+            try:
+                if rng is None:
+                    return self.read_bytes(path)
+                return self.read_bytes_range(path, *rng)
+            except TransientStorageError as e:
+                return e
+
+        if self.profile.pipeline_depth <= 1 or len(items) <= 1:
+            return [one(it) for it in items]
+        # each in-flight request pays its RTT on a pool thread, so the batch
+        # costs ~ceil(N / depth) round trips of wall clock
+        return list(self._batch_pool(len(items)).map(one, items))
+
+    def exists(self, path: str) -> bool:
+        self._request("HEAD")
+        return self.inner.exists(path)
+
+    def list_dir(self, path: str) -> list[str]:
+        self._request("LIST")
+        return self.inner.list_dir(path)
+
+    def size(self, path: str) -> int:
+        self._request("HEAD")
+        return self.inner.size(path)
+
+    # -- writes -----------------------------------------------------------
+    def write_bytes(self, path: str, data: bytes, *, overwrite: bool = False) -> None:
+        self._request("PUT")
+        self.inner.write_bytes(path, data, overwrite=overwrite)
+        if self._roll(self.profile.ambiguous_put_rate):
+            # the write landed but the caller never hears about it
+            raise TransientStorageError("timeout after apply (PUT)")
+
+    def delete(self, path: str) -> None:
+        self._request("DELETE")
+        self.inner.delete(path)

@@ -179,3 +179,32 @@ class LakeTable:
             return {}
         return {c: np.concatenate([b[c] for b in batches])
                 for c in batches[0]}
+
+    def verify_stats(self, version: str | None = None) -> list[str]:
+        """Cross-check the metadata layer against the data files' own
+        stats footers; returns the paths that disagree.
+
+        This is the integrity check behind metadata-only translation: every
+        format's metadata must carry the same nrows/min/max/null counts the
+        chunk footers do, or pruning gives wrong answers after a sync.  The
+        footers are fetched with batched ranged reads
+        (:func:`~repro.lst.chunkfile.read_chunks_stats`) — two pipelined
+        rounds for the whole table, never touching column data.
+        """
+        st = self.state(version)
+        metas = list(st.files.values())
+        footers = chunkfile.read_chunks_stats(self.fs, self.base,
+                                              [f.path for f in metas])
+
+        def disagree(meta_stats: dict, footer_stats: dict) -> bool:
+            # a format may carry no stats for a column (that only weakens
+            # pruning); corruption is carrying DIFFERENT values
+            for c, fstat in footer_stats.items():
+                m = meta_stats.get(c)
+                if m is not None and (m.min, m.max, m.nan_count) != \
+                        (fstat.min, fstat.max, fstat.nan_count):
+                    return True
+            return False
+
+        return [f.path for f, (nrows, stats) in zip(metas, footers)
+                if f.record_count != nrows or disagree(f.column_stats, stats)]

@@ -1,0 +1,444 @@
+"""Storage subsystem: simulated object store, retries, batching, counters.
+
+What this file pins:
+
+* ``MemoryFS`` has real object-store semantics — atomic put-if-absent,
+  prefix listings, suffix/to-EOF ranged reads;
+* racing conditional puts yield exactly ONE winner (the commit primitive),
+  at the raw-store level and through concurrent handle commits;
+* a transient throttle mid-sync is retried to success and an *ambiguous*
+  put (applied, response lost) is resolved as success, while a genuine
+  lost race still surfaces as a conflict;
+* a writer crashing mid-drain leaves a valid prefix on the simulated store
+  and a clean re-run completes from it;
+* batch reads are pipelined (a replay at RTT costs ~1 round of round
+  trips, not one per object);
+* the instrumented FS gives a per-unit request census, and the census is
+  PINNED: target-side requests per incremental unit are O(1) in target
+  history, total run requests are O(new commits) in source history — a
+  request-count regression fails here;
+* URI resolution keeps the bucket: two buckets with the same key path are
+  different tables.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import MetadataCache, SyncConfig, Telemetry, run_sync
+from repro.core.targets import TOKEN_KEY
+from repro.lst import LakeTable
+from repro.lst.schema import Field, PartitionSpec, Schema
+from repro.lst.storage import (InstrumentedFS, LocalFS, MemoryFS,
+                               PutIfAbsentError, RetryPolicy, RetryingFS,
+                               SimulatedObjectStore, StorageProfile,
+                               StorageRetryExhausted, TransientStorageError,
+                               layer_fs, make_fs, resolve_uri)
+
+SCHEMA = Schema([Field("k", "int64"), Field("part", "string")])
+NO_SLEEP = dict(sleep=lambda s: None)
+
+
+def _mk_table(fs, base, fmt="delta", n_commits=3, properties=None):
+    t = LakeTable.create(fs, base, SCHEMA, fmt, PartitionSpec(["part"]),
+                         properties)
+    for i in range(n_commits):
+        t.append({"k": np.array([i, i + 100], np.int64),
+                  "part": np.array([f"p{i % 2}", "p0"])})
+    return t
+
+
+def _cfg(base_uri, src, targets, **kw):
+    d = {"sourceFormat": src.upper(),
+         "targetFormats": [t.upper() for t in targets],
+         "datasets": [{"tableBasePath": base_uri}]}
+    d.update(kw)
+    return SyncConfig.from_dict(d)
+
+
+# ------------------------------------------------------------ MemoryFS core
+def test_memoryfs_object_store_semantics():
+    fs = MemoryFS()
+    fs.write_bytes("bkt/t/a/x", b"one")
+    fs.write_bytes("bkt/t/a/y", b"two")
+    fs.write_bytes("bkt/t/b", b"three")
+    assert fs.read_bytes("bkt/t/a/x") == b"one"
+    assert fs.list_dir("bkt/t") == ["a", "b"]
+    assert fs.list_dir("bkt/t/a") == ["x", "y"]
+    assert fs.list_dir("bkt/nope") == []
+    assert fs.exists("bkt/t/a") and fs.exists("bkt/t/a/x")
+    assert not fs.exists("bkt/t/c")
+    assert fs.size("bkt/t/b") == 5
+    with pytest.raises(PutIfAbsentError):
+        fs.write_bytes("bkt/t/b", b"clobber")
+    fs.write_bytes("bkt/t/b", b"clobber", overwrite=True)
+    assert fs.read_bytes("bkt/t/b") == b"clobber"
+    fs.delete("bkt/t/b")
+    assert not fs.exists("bkt/t/b")
+    with pytest.raises(FileNotFoundError):
+        fs.read_bytes("bkt/t/b")
+
+
+@pytest.mark.parametrize("make", [MemoryFS, LocalFS])
+def test_ranged_reads_suffix_and_to_eof(make, tmp_path):
+    fs = make()
+    path = ("bkt/obj" if isinstance(fs, MemoryFS)
+            else str(tmp_path / "obj"))
+    fs.write_bytes(path, b"0123456789")
+    assert fs.read_bytes_range(path, 2, 3) == b"234"
+    assert fs.read_bytes_range(path, -4, 4) == b"6789"     # suffix
+    assert fs.read_bytes_range(path, 6, -1) == b"6789"     # to EOF
+    assert fs.read_bytes_range(path, -20, 20) == b"0123456789"
+
+
+# --------------------------------------------------- put-if-absent races
+def test_racing_conditional_puts_one_winner():
+    fs = MemoryFS()
+    outcomes = []
+
+    def racer(i):
+        try:
+            fs.write_bytes("bkt/commit-7", b"writer-%d" % i)
+            outcomes.append(("win", i))
+        except PutIfAbsentError:
+            outcomes.append(("lose", i))
+
+    threads = [threading.Thread(target=racer, args=(i,)) for i in range(8)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    wins = [o for o in outcomes if o[0] == "win"]
+    assert len(wins) == 1
+    assert fs.read_bytes("bkt/commit-7") == b"writer-%d" % wins[0][1]
+
+
+def test_two_concurrent_executors_commit_race():
+    """Two handle writers racing the same next version: put-if-absent makes
+    one win the slot, the loser retries onto the next — both commits land,
+    no version is written twice."""
+    fs = MemoryFS()
+    _mk_table(fs, "bkt/t", "delta", 1)
+    results = []
+
+    def committer(tag):
+        h = LakeTable.open(fs, "bkt/t", "delta").handle
+        from repro.lst.chunkfile import DataFileMeta
+        add = DataFileMeta(path=f"data/{tag}.chunk", size_bytes=1,
+                           record_count=1)
+        results.append(h.commit([add], []))
+
+    threads = [threading.Thread(target=committer, args=(f"w{i}",))
+               for i in range(2)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert len(set(results)) == 2          # distinct versions, both landed
+    st = LakeTable.open(fs, "bkt/t", "delta").state()
+    assert {"data/w0.chunk", "data/w1.chunk"} <= set(st.files)
+
+
+# ------------------------------------------------ transient faults + retry
+def test_transient_throttle_mid_unit_retried_to_success():
+    """A sync unit whose requests get probabilistically 503'd completes via
+    the retry layer, lands the exact source state, and the retry counter
+    shows the faults were real."""
+    raw = MemoryFS()
+    t = _mk_table(raw, "bkt/t", "delta", 6)
+    fs = layer_fs(raw, profile=StorageProfile(fault_rate=0.15, seed=11),
+                  retry=RetryPolicy(max_attempts=10, base_delay_s=1e-4))
+    cfg = _cfg("mem://bkt/t", "delta", ["iceberg", "hudi"])
+    res = run_sync(cfg, fs)
+    assert all(r.ok for r in res), res
+    assert fs.retries() > 0
+    assert fs.inner.inner.injected_faults > 0
+    for tgt in ("iceberg", "hudi"):
+        got = LakeTable.open(raw, "bkt/t", tgt).read_all()
+        assert sorted(got["k"].tolist()) == \
+            sorted(t.read_all()["k"].tolist()), tgt
+
+
+def test_ambiguous_put_resolved_as_success():
+    """A conditional put that APPLIES but whose response is lost must not be
+    reported as a conflict: the retry layer reads the object back and
+    recognizes its own write."""
+    raw = MemoryFS()
+    sim = SimulatedObjectStore(raw, StorageProfile(ambiguous_put_rate=1.0))
+    fs = RetryingFS(sim, RetryPolicy(max_attempts=3), **NO_SLEEP)
+    fs.write_bytes("bkt/v7.json", b"commit-payload")
+    assert raw.read_bytes("bkt/v7.json") == b"commit-payload"
+    # a genuinely lost race is still a conflict
+    with pytest.raises(PutIfAbsentError):
+        fs.write_bytes("bkt/v7.json", b"other-writer")
+
+
+def test_retry_exhaustion_is_not_a_conflict():
+    raw = MemoryFS()
+    sim = SimulatedObjectStore(raw, StorageProfile(fault_rate=1.0, seed=0))
+    fs = RetryingFS(sim, RetryPolicy(max_attempts=3), **NO_SLEEP)
+    with pytest.raises(StorageRetryExhausted):
+        fs.read_bytes("bkt/x")
+    with pytest.raises(StorageRetryExhausted):
+        fs.write_bytes("bkt/x", b"data")
+
+
+def test_batch_reads_retry_only_failed_items():
+    """A throttled batch refetches its 503'd items, not the whole batch."""
+    raw = MemoryFS()
+    paths = [f"bkt/o{i}" for i in range(32)]
+    for i, p in enumerate(paths):
+        raw.write_bytes(p, b"payload-%d" % i)
+    sim = SimulatedObjectStore(raw, StorageProfile(fault_rate=0.3, seed=5))
+    fs = RetryingFS(sim, RetryPolicy(max_attempts=10), **NO_SLEEP)
+    out = fs.read_many(paths)
+    assert out == [b"payload-%d" % i for i in range(32)]
+    assert fs.retries > 0
+    # requests ~= N + retried items, far below N * attempts
+    assert sim.requests < 2 * len(paths)
+
+
+# -------------------------------------------------- crash-prefix recovery
+class _DieAfterPuts:
+    """Pass-through FS whose writes start failing hard after a budget —
+    a deterministic 'process died mid-drain' for recovery tests."""
+
+    def __init__(self, inner, puts_allowed: int):
+        self.inner = inner
+        self.puts_allowed = puts_allowed
+
+    def write_bytes(self, path, data, *, overwrite=False):
+        if self.puts_allowed <= 0:
+            raise TransientStorageError("simulated crash (connection gone)")
+        self.puts_allowed -= 1
+        return self.inner.write_bytes(path, data, overwrite=overwrite)
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+
+def test_crash_prefix_recovery_on_simulated_store():
+    """Kill a drain after a few target commits: the store holds a valid
+    prefix (every flushed commit is atomic), and re-running the sync
+    resumes from the recorded token and converges — no duplicates."""
+    raw = MemoryFS()
+    t = _mk_table(raw, "bkt/t", "delta", 2)
+    cfg = _cfg("mem://bkt/t", "delta", ["hudi"])
+    assert run_sync(cfg, layer_fs(raw))[0].ok           # bootstrap
+    for i in range(6):
+        t.append({"k": np.array([500 + i], np.int64),
+                  "part": np.array(["p1"])})
+
+    # hudi writes 3 objects per instant; allow ~2.5 commits then die
+    dying = RetryingFS(_DieAfterPuts(raw, 8),
+                       RetryPolicy(max_attempts=1), **NO_SLEEP)
+    res = run_sync(cfg, dying)
+    assert not res[0].ok                                 # the unit died
+    prefix = LakeTable.open(raw, "bkt/t", "hudi")
+    token = prefix.handle.latest_extra_metadata().get(TOKEN_KEY)
+    assert token is not None                             # a valid prefix
+
+    res = run_sync(cfg, layer_fs(raw))                   # recovery = rerun
+    assert res[0].ok and res[0].mode == "INCREMENTAL"
+    got = LakeTable.open(raw, "bkt/t", "hudi").read_all()
+    assert sorted(got["k"].tolist()) == sorted(t.read_all()["k"].tolist())
+
+
+# --------------------------------------------------------- batch pipelining
+def test_read_many_is_pipelined_under_rtt():
+    raw = MemoryFS()
+    paths = [f"bkt/o{i}" for i in range(12)]
+    for p in paths:
+        raw.write_bytes(p, b"x")
+    rtt = 0.010
+
+    def timed(depth):
+        fs = SimulatedObjectStore(
+            raw, StorageProfile(rtt_ms=rtt * 1000, pipeline_depth=depth))
+        t0 = time.perf_counter()
+        out = fs.read_many(paths)
+        assert out == [b"x"] * len(paths)
+        return time.perf_counter() - t0, fs.requests
+
+    seq_dt, seq_reqs = timed(1)
+    bat_dt, bat_reqs = timed(16)
+    assert seq_reqs == bat_reqs == len(paths)   # same request count...
+    assert seq_dt >= len(paths) * rtt           # ...serial pays every RTT
+    assert bat_dt < seq_dt / 2                  # ...pipelined overlaps them
+
+
+# ------------------------------------------------- URI registry resolution
+def test_resolve_uri_keeps_bucket():
+    assert resolve_uri("/plain/path") == "/plain/path"
+    assert resolve_uri("file:///tmp/x") == "/tmp/x"
+    assert resolve_uri("file://localhost/tmp/x") == "/tmp/x"
+    assert resolve_uri("mem://bucket-a/sales") == "bucket-a/sales"
+    assert resolve_uri("s3sim://bucket-b/sales") == "bucket-b/sales"
+    assert resolve_uri("abfs://c@acct.dfs.core.windows.net/sales") == \
+        "c@acct.dfs.core.windows.net/sales"
+    # the seed bug: both buckets collapsed to "/sales" and collided
+    assert resolve_uri("mem://bucket-a/sales") != \
+        resolve_uri("mem://bucket-b/sales")
+
+
+def test_same_key_in_two_buckets_does_not_collide():
+    fs = MemoryFS()
+    _mk_table(fs, resolve_uri("mem://bucket-a/sales"), "delta", 1)
+    _mk_table(fs, resolve_uri("mem://bucket-b/sales"), "delta", 2)
+    a = LakeTable.open(fs, "bucket-a/sales", "delta")
+    b = LakeTable.open(fs, "bucket-b/sales", "delta")
+    assert len(a.history()) == 2 and len(b.history()) == 3
+
+
+def test_make_fs_registry():
+    assert isinstance(make_fs("file:///tmp/x"), LocalFS)
+    assert isinstance(make_fs("/plain/path"), LocalFS)
+    assert isinstance(make_fs("mem://b/t"), MemoryFS)
+    assert isinstance(make_fs("s3sim://b/t"), SimulatedObjectStore)
+    # mem:// views share one store (that's what makes it "a bucket")
+    assert make_fs("mem://b/t") is make_fs("mem://c/u")
+    with pytest.raises(ValueError, match="unknown storage scheme"):
+        make_fs("gopher://b/t")
+
+
+def test_config_storage_options_parse_and_build():
+    cfg = _cfg("s3sim://bkt/t", "delta", ["iceberg"],
+               storage={"rttMs": 2.5, "faultRate": 0.01, "pipelineDepth": 4,
+                        "seed": 9, "retry": {"maxAttempts": 7}})
+    assert cfg.storage.rtt_ms == 2.5
+    assert cfg.storage.retry_max_attempts == 7
+    fs = cfg.build_fs(Telemetry())
+    assert isinstance(fs, InstrumentedFS)
+    assert isinstance(fs.inner, RetryingFS)
+    sim = fs.inner.inner
+    assert isinstance(sim, SimulatedObjectStore)
+    assert sim.profile.rtt_ms == 2.5 and sim.profile.pipeline_depth == 4
+    assert isinstance(sim.inner, MemoryFS)
+    # pipelineDepth/seed are honored on s3sim even with NO injection knobs
+    # (the sequential comparison arm is exactly {"pipelineDepth": 1})
+    seq = _cfg("s3sim://bkt/t", "delta", ["iceberg"],
+               storage={"pipelineDepth": 1, "seed": 7}).build_fs()
+    assert seq.inner.inner.profile.pipeline_depth == 1
+    assert seq.inner.inner.profile.seed == 7
+    # mixed schemes are rejected (one FileSystem per run)
+    bad = SyncConfig.from_dict({
+        "sourceFormat": "DELTA", "targetFormats": ["ICEBERG"],
+        "datasets": [{"tableBasePath": "mem://a/t"},
+                     {"tableBasePath": "s3sim://b/t"}]})
+    with pytest.raises(ValueError, match="multiple storage schemes"):
+        bad.build_fs()
+
+
+# ------------------------------------------- instrumented request censuses
+def _warm_drain(history: int, backlog: int):
+    """Bootstrap + grow + warm-cache drain; returns (result, run_stats)."""
+    raw = MemoryFS()
+    tel = Telemetry()
+    fs = layer_fs(raw, telemetry=tel)
+    t = _mk_table(raw, "bkt/t", "delta", 1,
+                  properties={"delta.checkpointInterval": "1000"})
+    cfg = _cfg("mem://bkt/t", "delta", ["iceberg"])
+    cache = MetadataCache(fs)
+    assert run_sync(cfg, fs, cache=cache)[0].mode == "FULL"
+    for i in range(history):
+        t.append({"k": np.array([i], np.int64), "part": np.array(["p0"])})
+    assert run_sync(cfg, fs, cache=cache)[0].ok
+    for i in range(backlog):
+        t.append({"k": np.array([9000 + i], np.int64),
+                  "part": np.array(["p1"])})
+    before = fs.stats()
+    res = run_sync(cfg, fs, cache=cache)
+    after = fs.stats()
+    assert res[0].ok and res[0].commits_synced == backlog
+    run_reqs = {k: getattr(after, k) - getattr(before, k)
+                for k in ("get", "put", "list", "head")}
+    run_reqs["requests"] = sum(run_reqs.values())
+    return res[0], run_reqs
+
+
+def test_per_unit_storage_census_pinned():
+    """The per-unit census (target-side: the unit runs the drain, planning
+    reads happen outside the scope) stays flat as the TARGET history grows,
+    and the whole run's requests stay flat as the SOURCE history grows —
+    i.e. reads are O(1) per unit / O(new commits) per run.  The absolute
+    numbers are pinned so a request-count regression fails loudly; update
+    them only with a storage-architecture change that explains the delta.
+    """
+    r8, run8 = _warm_drain(history=8, backlog=4)
+    r32, run32 = _warm_drain(history=32, backlog=4)
+    assert r8.storage_ops is not None
+    # unit census flat in history
+    assert r8.storage_ops["requests"] == r32.storage_ops["requests"], \
+        (r8.storage_ops, r32.storage_ops)
+    # whole-run requests flat in history too (tail-only refresh)
+    assert run8["requests"] == run32["requests"], (run8, run32)
+    # and the pinned absolute numbers (see docstring)
+    assert r8.storage_ops["requests"] == PER_UNIT_REQUESTS_4_COMMIT_DRAIN, \
+        r8.storage_ops
+    assert run8["requests"] == PER_RUN_REQUESTS_4_COMMIT_DRAIN, run8
+
+
+def test_backlog_scaling_is_linear_in_new_commits():
+    _, run4 = _warm_drain(history=8, backlog=4)
+    _, run8 = _warm_drain(history=8, backlog=8)
+    # each extra source commit costs a bounded number of extra requests
+    per_commit = (run8["requests"] - run4["requests"]) / 4
+    assert per_commit <= MAX_REQUESTS_PER_NEW_COMMIT, (run4, run8)
+
+
+# ------------------------------------------------ batched chunkfile stats
+def test_read_chunks_stats_batched_matches_single():
+    from repro.lst import chunkfile
+
+    raw = MemoryFS()
+    fs = layer_fs(raw)
+    rels, want = [], []
+    for i in range(5):
+        cols = {"a": np.arange(i, i + 1000, dtype=np.int64),
+                "b": np.linspace(-i, i, 1000)}
+        rel = f"d/f{i}.chunk"
+        chunkfile.write_chunk(raw, "bkt/t", rel, cols)
+        rels.append(rel)
+        want.append(chunkfile.read_chunk_stats(raw, "bkt/t", rel))
+    before = fs.stats()
+    got = chunkfile.read_chunks_stats(fs, "bkt/t", rels)
+    after = fs.stats()
+    assert got == want
+    # two batched range rounds (trailer + footer) per file, no size() calls,
+    # and the column data is never fetched
+    assert after.get - before.get == 2 * len(rels)
+    assert after.head - before.head == 0
+    total = sum(raw.size(f"bkt/t/{r}") for r in rels)
+    assert after.bytes_read - before.bytes_read < total / 10
+
+
+def test_verify_stats_across_sync_and_detects_corruption():
+    """Metadata-vs-footer integrity holds in the source AND in every synced
+    target (metadata-only translation preserves pruning stats), and a
+    metadata lie is caught."""
+    raw = MemoryFS()
+    t = _mk_table(raw, "bkt/t", "delta", 3)
+    run_sync(_cfg("mem://bkt/t", "delta", ["iceberg", "hudi"]), layer_fs(raw))
+    assert t.verify_stats() == []
+    for tgt in ("iceberg", "hudi"):
+        assert LakeTable.open(raw, "bkt/t", tgt).verify_stats() == [], tgt
+    # corrupt one commit's recorded stats in the delta log: caught
+    log = "bkt/t/_delta_log"
+    name = [n for n in raw.list_dir(log) if n.endswith("00001.json")][0]
+    # add.stats is an escaped JSON string inside the action line
+    doctored = raw.read_bytes(f"{log}/{name}").decode().replace(
+        '\\"numRecords\\": 2', '\\"numRecords\\": 3')
+    raw.write_bytes(f"{log}/{name}", doctored.encode(), overwrite=True)
+    assert LakeTable.open(raw, "bkt/t", "delta").verify_stats() != []
+
+
+# Pinned censuses for the scenario in _warm_drain (delta source -> iceberg
+# target, warm shared cache, 4-commit backlog, transactional drain):
+# unit = 5 GET (target metadata + hint + tail entries) + 16 PUT (4 commits x
+# manifest/manifest-list/metadata/hint) + 4 HEAD; run adds the planner's
+# tail refresh (one GET per new source commit) and head/list probes.
+PER_UNIT_REQUESTS_4_COMMIT_DRAIN = 25
+PER_RUN_REQUESTS_4_COMMIT_DRAIN = 39
+MAX_REQUESTS_PER_NEW_COMMIT = 6
