@@ -11,13 +11,26 @@ SUBSTR (e.g. ``--filter drain``).  ``--quick`` is the CI smoke mode: every
 sweep shrinks to its smallest shape so the whole harness proves itself in
 seconds (results go to ``BENCH_xtable.quick.json`` — a smoke run never
 clobbers the full record).  ``--out PATH`` moves the JSON artifact.
+
+The harness is a CI *gate*: a benchmark that raises, or that completes
+without reporting a single row, marks the run failed — every other
+benchmark still runs (and the JSON of the surviving rows is still
+written), but the process exits non-zero, so a broken bench can never
+hide behind a partial artifact.
 The roofline table (per arch x shape x mesh) is produced separately by
 ``repro.launch.dryrun`` + ``repro.launch.roofline`` from compiled artifacts.
 """
 
 import argparse
 import json
+import os
 import sys
+
+# support both invocations: ``python -m benchmarks.run`` (repo root already
+# importable) and ``python benchmarks/run.py`` (sys.path[0] is benchmarks/)
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
 
 
 def main(argv=None) -> None:
@@ -54,19 +67,34 @@ def main(argv=None) -> None:
 
     print("name,us_per_call,derived")
     ran = 0
+    failures = []
     for mod in (bench_xtable, bench_kernels):
         for bench in mod.ALL:
             if args.filter and args.filter not in bench.__name__:
                 continue
             ran += 1
+            name = f"{mod.__name__}.{bench.__name__}"
+            rows_before = len(rows)
             try:
                 bench(report)
-            except Exception as e:  # keep the harness honest but resilient
-                print(f"{mod.__name__}.{bench.__name__},FAIL,{e}",
-                      file=sys.stderr)
-                raise
+            except Exception as e:  # finish the sweep, but fail the run
+                print(f"{name},FAIL,{e}", file=sys.stderr)
+                failures.append(f"{name}: {type(e).__name__}: {e}")
+                continue
+            if len(rows) == rows_before:
+                # a bench that "succeeds" without measuring anything is
+                # broken too — an empty artifact must not gate green
+                failures.append(f"{name}: reported no rows")
+    if ran == 0:
+        failures.append(f"no benchmark matched --filter {args.filter!r}")
     with open(args.out, "w") as f:
         json.dump({"rows": rows}, f, indent=1)
+    if failures:
+        print(f"# FAILED {len(failures)} of {ran} benchmarks "
+              f"({len(rows)} rows) -> {args.out}", file=sys.stderr)
+        for line in failures:
+            print(f"#   {line}", file=sys.stderr)
+        sys.exit(1)
     print(f"# {ran} benchmarks ok ({len(rows)} rows) -> {args.out}",
           file=sys.stderr)
 

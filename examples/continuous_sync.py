@@ -1,0 +1,109 @@
+"""Continuous sync — the always-on daemon the paper's promise implies.
+
+A table written in one format is readable in any other "with negligible
+overhead" only if translation keeps up with the writer.  This example runs
+the :class:`~repro.core.daemon.SyncDaemon` as that companion process: a
+scripted Hudi writer appends against an ``s3sim://`` object store while
+the daemon's watch -> replan -> drain cycles keep Delta and Iceberg
+targets fresh, then the daemon drains the tail gracefully and stops.
+
+Usage::
+
+    PYTHONPATH=src python examples/continuous_sync.py
+
+    # the same daemon, driven from your own code:
+    from repro.core import SyncConfig, SyncDaemon, run_daemon
+
+    config = SyncConfig.from_yaml('''
+    sourceFormat: HUDI
+    targetFormats: [DELTA, ICEBERG]
+    datasets:
+      - tableBasePath: s3sim://warehouse/events
+    daemon:
+      pollIntervalMs: 1000        # watch cadence
+      maxCyclesIdle: 30           # exit after 30 quiet cycles (omit: forever)
+      backoff: {baseDelayMs: 200, maxDelayMs: 30000}   # per-table 503 backoff
+    ''')
+
+    reports = run_daemon(config, cycles=100)   # bounded run, or:
+    daemon = SyncDaemon(config)                # long-lived service object
+    daemon.run()                               # ... until daemon.stop()
+    daemon.stop(drain=True)                    # finish the backlog, then stop
+
+Each cycle probes every source head with ONE cheap request (delta log-tail
+listing / iceberg version-hint read / hudi newest-instant listing), replans
+only tables whose head moved or that still carry a capped backlog, and
+drains them through the transactional executor path — a quiet table costs
+exactly its head probe.  ``maxCommitsPerSync`` bounds each cycle's drain;
+a transient storage error backs off the one affected table with jittered
+exponential delays while every other table keeps syncing.
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import SyncConfig, SyncDaemon, Telemetry
+from repro.lst import LakeTable
+from repro.lst.schema import Field, PartitionSpec, Schema
+from repro.lst.storage import shared_store
+
+BASE = "warehouse/events"
+
+# --- the writer's side: a Hudi table on the simulated object store --------
+store = shared_store("s3sim")          # the bucket namespace s3sim:// resolves to
+schema = Schema([Field("event_id", "int64"), Field("kind", "string")])
+events = LakeTable.create(store, BASE, schema, "hudi", PartitionSpec(["kind"]))
+events.append({"event_id": np.array([1, 2, 3]),
+               "kind": np.array(["view", "view", "buy"])})
+
+# --- the daemon's side: Listing-2 config + a daemon block -----------------
+config = SyncConfig.from_yaml("""
+sourceFormat: HUDI
+targetFormats:
+  - DELTA
+  - ICEBERG
+datasets:
+  -
+    tableBasePath: s3sim://warehouse/events
+maxCommitsPerSync: 2
+daemon:
+  pollIntervalMs: 50
+  backoff: {baseDelayMs: 100}
+""")
+telemetry = Telemetry()
+daemon = SyncDaemon(config, telemetry=telemetry)
+
+# --- scripted workload: appends interleaved with daemon cycles ------------
+print("== bootstrap cycle (FULL sync into both targets)")
+print("  ", daemon.run_cycle().summary())
+
+rng = np.random.default_rng(0)
+for round_no in range(3):
+    for _ in range(round_no + 1):              # growing burst each round
+        events.append({"event_id": rng.integers(100, 1000, 4),
+                       "kind": np.array(["view", "buy", "view", "view"])})
+    rep = daemon.run_cycle()
+    print(f"== round {round_no}: writer appended {round_no + 1} commits")
+    print("  ", rep.summary())
+    if rep.lag:
+        print("   lag:", {f"{d}->{t}": n for (d, t), n in rep.lag.items()})
+
+print("== graceful stop: drain whatever backlog is left, then halt")
+daemon.stop(drain=True)
+for rep in daemon.run():
+    print("  ", rep.summary())
+
+# --- proof: all three formats read the same rows --------------------------
+want = sorted(events.read_all()["event_id"].tolist())
+for fmt in ("hudi", "delta", "iceberg"):
+    got = sorted(LakeTable.open(store, BASE, fmt).read_all()
+                 ["event_id"].tolist())
+    marker = "ok" if got == want else "MISMATCH"
+    print(f"{fmt:8s} sees {len(got)} rows via shared data files [{marker}]")
+    assert got == want, fmt
+
+print("\ndaemon telemetry counters:", {
+    k: v for k, v in telemetry.summary().items() if k.startswith("daemon.")})

@@ -1,7 +1,5 @@
 """gemma2-27b: 46L, GQA 32H/16KV, local(4096)+global alternating, logit
 softcaps, tied embeddings. [arXiv:2408.00118; hf]"""
-from dataclasses import replace
-
 from repro.configs.registry import _shrink_common
 from repro.models.config import LayerSpec, ModelConfig
 

@@ -7,7 +7,10 @@ explicit plan -> shared-metadata-cache -> concurrent-execute pipeline (see
 facade with persisted state, caching, and telemetry).
 """
 
-from repro.core.config import DatasetConfig, StorageOptions, SyncConfig
+from repro.core.config import (DaemonOptions, DatasetConfig, StorageOptions,
+                               SyncConfig)
+from repro.core.daemon import (DaemonCycleReport, ManualClock, SyncDaemon,
+                               SystemClock, run_daemon)
 from repro.core.executor import SyncExecutor
 from repro.core.ir import (InternalDataFile, InternalSnapshot, InternalTable,
                            TableChange, fold_changes)
@@ -18,8 +21,10 @@ from repro.core.sync import SyncResult, XTableSyncer, run_sync
 from repro.core.targets import make_target
 from repro.core.telemetry import Telemetry
 
-__all__ = ["DatasetConfig", "StorageOptions", "SyncConfig", "InternalDataFile",
-           "InternalSnapshot", "InternalTable", "TableChange", "fold_changes",
-           "make_source", "make_target", "run_sync", "SyncResult",
-           "XTableSyncer", "Telemetry", "SyncPlan", "SyncPlanner", "SyncUnit",
-           "SyncExecutor", "MetadataCache", "TableMetadataIndex"]
+__all__ = ["DaemonOptions", "DatasetConfig", "StorageOptions", "SyncConfig",
+           "InternalDataFile", "InternalSnapshot", "InternalTable",
+           "TableChange", "fold_changes", "make_source", "make_target",
+           "run_sync", "SyncResult", "XTableSyncer", "Telemetry", "SyncPlan",
+           "SyncPlanner", "SyncUnit", "SyncExecutor", "MetadataCache",
+           "TableMetadataIndex", "DaemonCycleReport", "ManualClock",
+           "SyncDaemon", "SystemClock", "run_daemon"]

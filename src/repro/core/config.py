@@ -28,6 +28,12 @@ Accepts YAML text, a file path, or a plain dict.  Optional knobs:
   exponential-backoff retry layer.  The backend itself comes from the
   dataset URI scheme (``file://`` / ``mem://`` / ``s3sim://`` / plain
   path) via the storage registry.
+* ``daemon`` — continuous-sync daemon scheduling (see ``core/daemon.py``):
+  ``pollIntervalMs`` between watch cycles, ``maxCyclesIdle`` (stop after N
+  consecutive idle cycles; default run forever), and
+  ``backoff: {baseDelayMs, maxDelayMs, multiplier, jitter, seed}`` — the
+  jittered per-table backoff applied when a table's probe or drain hits a
+  (transient) storage error.
 """
 
 from __future__ import annotations
@@ -97,6 +103,43 @@ class StorageOptions:
 
 
 @dataclass(frozen=True)
+class DaemonOptions:
+    """Continuous-sync daemon scheduling knobs (the ``daemon:`` block)."""
+    poll_interval_ms: float = 1000.0
+    max_cycles_idle: int | None = None     # None = run until stopped
+    backoff_base_delay_ms: float = 100.0
+    backoff_max_delay_ms: float = 30_000.0
+    backoff_multiplier: float = 2.0
+    backoff_jitter: float = 0.1            # +-fraction of the delay
+    seed: int = 0                          # jitter RNG seed (determinism)
+
+    def __post_init__(self):
+        if self.poll_interval_ms < 0:
+            raise ValueError("pollIntervalMs must be >= 0")
+        if self.max_cycles_idle is not None and self.max_cycles_idle < 1:
+            raise ValueError("maxCyclesIdle must be >= 1")
+
+    def backoff_delay_s(self, failures: int) -> float:
+        """Un-jittered backoff after ``failures`` consecutive errors."""
+        d = self.backoff_base_delay_ms * \
+            (self.backoff_multiplier ** max(0, failures - 1))
+        return min(self.backoff_max_delay_ms, d) / 1000.0
+
+    @staticmethod
+    def from_dict(d: dict) -> "DaemonOptions":
+        b = d.get("backoff", {})
+        mci = d.get("maxCyclesIdle")
+        return DaemonOptions(
+            poll_interval_ms=float(d.get("pollIntervalMs", 1000.0)),
+            max_cycles_idle=int(mci) if mci is not None else None,
+            backoff_base_delay_ms=float(b.get("baseDelayMs", 100.0)),
+            backoff_max_delay_ms=float(b.get("maxDelayMs", 30_000.0)),
+            backoff_multiplier=float(b.get("multiplier", 2.0)),
+            backoff_jitter=float(b.get("jitter", 0.1)),
+            seed=int(b.get("seed", 0)))
+
+
+@dataclass(frozen=True)
 class SyncConfig:
     source_format: str
     target_formats: tuple
@@ -114,6 +157,8 @@ class SyncConfig:
     max_commits_per_sync: int | None = None
     # storage-backend behavior (latency/fault injection, retry policy)
     storage: StorageOptions = field(default_factory=StorageOptions)
+    # continuous-sync daemon scheduling (poll interval, idle stop, backoff)
+    daemon: DaemonOptions = field(default_factory=DaemonOptions)
 
     def __post_init__(self):
         for f in (self.source_format, *self.target_formats):
@@ -139,7 +184,8 @@ class SyncConfig:
             transactional_targets=bool(d.get("transactionalTargets", True)),
             coalesce_incremental=bool(d.get("coalesceIncremental", False)),
             max_commits_per_sync=int(mcps) if mcps is not None else None,
-            storage=StorageOptions.from_dict(d.get("storage", {})))
+            storage=StorageOptions.from_dict(d.get("storage", {})),
+            daemon=DaemonOptions.from_dict(d.get("daemon", {})))
 
     def build_fs(self, telemetry=None):
         """Construct the storage stack this config describes.

@@ -1,0 +1,396 @@
+"""Continuous-sync daemon: watch -> replan -> drain cycles.
+
+The paper's promise — a table written in one format is readable in any
+other "with negligible overhead" — only holds in practice if translation
+runs *continuously* as writers append, not as one-shot batch jobs.  This
+module turns the batch pipeline (``SyncPlanner`` / ``MetadataCache`` /
+``SyncExecutor``) into that always-on companion process:
+
+1. **Watch** — every cycle probes each source table's head with ONE cheap
+   storage request (``handle.head_token()``: delta log-tail listing,
+   iceberg ``version-hint`` read, hudi newest-instant listing — never a
+   replay).  A quiet table costs exactly its head probe and nothing else:
+   no planning, no target reads.
+2. **Replan** — only datasets whose token moved (or that still carry a
+   capped/failed backlog) are re-planned, through the shared
+   :class:`~repro.core.metadata_cache.MetadataCache` held across cycles, so
+   a cycle with N new commits costs O(N) source reads (the tail-only index
+   refresh) plus O(1) target reads per drained unit.
+3. **Drain** — the changed units run through the normal transactional /
+   coalescing executor path; ``maxCommitsPerSync`` bounds each cycle's
+   drain (backpressure), and the leftover backlog keeps the dataset marked
+   *pending* so the next cycle continues from the recorded sync token even
+   if the source head did not move again.
+
+Scheduling is deterministic: the clock is injected (``ManualClock`` in
+tests and benchmarks — nothing ever wall-sleeps), the poll interval comes
+from the config's ``daemon:`` block, and a table whose probe or drain hits
+a storage error backs off individually with seeded, jittered exponential
+delays — one throttled table never stalls the fleet.
+
+Every cycle emits a :class:`DaemonCycleReport`: tables probed / quiet /
+changed / backed-off, units planned / drained / skipped / errored, commits
+applied, remaining lag in commits per (dataset, target), and the cycle's
+exact storage-request census when the filesystem is instrumented.
+
+``stop()`` is graceful: the in-flight cycle always completes (every target
+commit is an atomic put-if-absent, so there is no torn state to clean up).
+``stop(drain=True)`` keeps cycling without poll sleeps until no table has a
+pending backlog, then stops — call ``stop()`` again to give up on a
+persistently failing table and exit immediately.
+
+Facade: ``run_daemon(config, cycles=N)`` for scripts and operators;
+``examples/continuous_sync.py`` drives it against an ``s3sim://`` store.
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+import time
+from dataclasses import dataclass, field
+
+from repro.core.config import DatasetConfig, SyncConfig
+from repro.core.executor import SyncExecutor
+from repro.core.metadata_cache import MetadataCache
+from repro.core.plan import ERROR, SKIP, SyncPlan, SyncPlanner
+from repro.core.telemetry import Telemetry
+
+__all__ = ["SystemClock", "ManualClock", "DaemonCycleReport", "SyncDaemon",
+           "run_daemon"]
+
+# unbounded run(): rolling window of retained per-cycle reports (an
+# always-on daemon at 1s polls produces ~86k cycles/day; keeping them all
+# would grow memory with uptime)
+MAX_RETAINED_REPORTS = 1000
+
+
+class SystemClock:
+    """Wall clock (monotonic) — the default outside tests."""
+
+    def now(self) -> float:
+        return time.monotonic()
+
+    def sleep(self, seconds: float) -> None:
+        if seconds > 0:
+            time.sleep(seconds)
+
+    def wait(self, event: threading.Event, seconds: float) -> bool:
+        """Sleep up to ``seconds`` but wake immediately if ``event`` sets —
+        this is what makes ``stop()`` interrupt a long poll interval."""
+        if seconds > 0:
+            return event.wait(seconds)
+        return event.is_set()
+
+
+class ManualClock:
+    """Deterministic clock: ``sleep`` advances ``now`` instantly.
+
+    Injected into the daemon by tests and benchmarks so poll intervals and
+    backoff windows are exercised without ever wall-sleeping.
+    """
+
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+
+    def now(self) -> float:
+        return self._t
+
+    def sleep(self, seconds: float) -> None:
+        if seconds > 0:
+            self._t += seconds
+
+    def wait(self, event: threading.Event, seconds: float) -> bool:
+        self.sleep(seconds)
+        return event.is_set()
+
+    def advance(self, seconds: float) -> None:
+        self._t += float(seconds)
+
+
+@dataclass
+class _TableWatch:
+    """Per-dataset watch state carried across cycles."""
+    token: str | None = None   # head token as of the last clean drain
+    pending: bool = False      # bounded/failed drain left commits behind
+    failures: int = 0          # consecutive probe/drain errors
+    not_before: float = 0.0    # backoff window end (clock time)
+
+
+@dataclass
+class DaemonCycleReport:
+    """What one watch -> replan -> drain cycle saw and did."""
+    cycle: int
+    started_at: float = 0.0        # clock time at cycle start
+    elapsed_s: float = 0.0
+    probed: int = 0                # tables head-probed this cycle
+    quiet: int = 0                 # probed, head unchanged, no backlog
+    changed: int = 0               # probed, head moved or backlog pending
+    backed_off: int = 0            # skipped: inside a backoff window
+    table_errors: int = 0          # probe/plan/drain blew up for the table
+    units_planned: int = 0
+    units_drained: int = 0         # FULL / INCREMENTAL executed ok
+    units_skipped: int = 0
+    units_errored: int = 0
+    commits_applied: int = 0       # source commits applied across all units
+    lag: dict = field(default_factory=dict)   # (dataset, target) -> commits
+                                              # still behind after the cycle
+    failures: list = field(default_factory=list)  # (dataset, phase, error)
+    storage_ops: dict | None = None    # cycle's storage-request census delta
+                                       # (instrumented filesystems only)
+    results: list = field(default_factory=list)   # SyncResults, plan order
+
+    @property
+    def idle(self) -> bool:
+        """Nothing to do and nothing in the way: every table quiet."""
+        return (self.changed == 0 and self.backed_off == 0
+                and self.table_errors == 0)
+
+    @property
+    def total_lag(self) -> int:
+        return sum(self.lag.values())
+
+    def summary(self) -> str:
+        return (f"cycle {self.cycle}: probed={self.probed} "
+                f"quiet={self.quiet} changed={self.changed} "
+                f"backed_off={self.backed_off} "
+                f"drained={self.units_drained} skipped={self.units_skipped} "
+                f"errored={self.units_errored + self.table_errors} "
+                f"commits={self.commits_applied} lag={self.total_lag}")
+
+
+class SyncDaemon:
+    """Always-on continuous sync over one :class:`SyncConfig`.
+
+    Holds the shared filesystem, metadata cache, telemetry and per-table
+    watch state across cycles; ``run_cycle()`` is one deterministic watch ->
+    replan -> drain pass, ``run()`` loops cycles on the injected clock.
+    Thread-safety: ``run()`` / ``run_cycle()`` belong to one driving thread;
+    ``stop()`` may be called from any thread.
+    """
+
+    def __init__(self, config: SyncConfig, fs=None,
+                 telemetry: Telemetry | None = None,
+                 cache: MetadataCache | None = None, *,
+                 max_workers: int | None = None, clock=None):
+        self.config = config
+        self.telemetry = telemetry or Telemetry()
+        self.fs = fs or config.build_fs(self.telemetry)
+        self.cache = cache or MetadataCache(self.fs)
+        self.max_workers = max_workers
+        self.clock = clock or SystemClock()
+        self.opts = config.daemon
+        self.cycles_run = 0
+        self._rng = random.Random(self.opts.seed)
+        self._watch: dict[str, _TableWatch] = {}
+        self._stop_event = threading.Event()
+        self._drain_on_stop = False
+
+    # ------------------------------------------------------------------ api
+    def run_cycle(self) -> DaemonCycleReport:
+        """One watch -> replan -> drain pass over every dataset."""
+        rep = DaemonCycleReport(cycle=self.cycles_run,
+                                started_at=self.clock.now())
+        t0 = time.perf_counter()
+        stats_fn = getattr(self.fs, "stats", None)
+        before = stats_fn().as_dict() if stats_fn is not None else None
+
+        for ds in self.config.datasets:
+            w = self._watch.setdefault(ds.path, _TableWatch())
+            if self.clock.now() < w.not_before:
+                rep.backed_off += 1
+                continue
+            try:
+                token = self._probe(ds)
+            except Exception as e:
+                self._table_failed(ds, w, rep, "probe", e)
+                continue
+            rep.probed += 1
+            if token == w.token and not w.pending:
+                rep.quiet += 1
+                continue
+            rep.changed += 1
+            try:
+                self._drain(ds, w, token, rep)
+            except Exception as e:
+                self._table_failed(ds, w, rep, "drain", e)
+
+        if before is not None:
+            after = stats_fn().as_dict()
+            rep.storage_ops = {k: after[k] - before[k] for k in after}
+        rep.elapsed_s = time.perf_counter() - t0
+        self.cycles_run += 1
+        self.telemetry.bump("daemon.cycles")
+        self.telemetry.record("daemon", "*", "cycle", rep.summary(),
+                              rep.elapsed_s)
+        return rep
+
+    def run(self, cycles: int | None = None,
+            max_cycles_idle: int | None = None) -> list[DaemonCycleReport]:
+        """Loop cycles on the injected clock until a bound or a stop.
+
+        ``cycles`` caps the number of cycles this call runs (None = no
+        cap); ``max_cycles_idle`` (default: the config's ``maxCyclesIdle``)
+        stops after that many *consecutive* idle cycles.  A pending
+        ``stop()`` wins over everything — including an in-progress poll
+        sleep, which it wakes immediately; ``stop(drain=True)`` keeps
+        cycling — skipping poll sleeps while progress is being made —
+        until no table has a pending backlog.
+
+        Returns the per-cycle reports; an *unbounded* run retains only the
+        newest ``MAX_RETAINED_REPORTS`` so service-mode memory stays flat.
+        """
+        if max_cycles_idle is None:
+            max_cycles_idle = self.opts.max_cycles_idle
+        poll_s = self.opts.poll_interval_ms / 1000.0
+        reports: list[DaemonCycleReport] = []
+        ran = 0
+        idle = 0
+        while True:
+            if self._stop_event.is_set() and \
+                    not (self._drain_on_stop and self._pending()):
+                break
+            rep = self.run_cycle()
+            reports.append(rep)
+            ran += 1
+            if cycles is None and len(reports) > MAX_RETAINED_REPORTS:
+                # unbounded service mode must not grow memory with uptime:
+                # keep a rolling window of the newest reports
+                del reports[0]
+            idle = idle + 1 if rep.idle else 0
+            if cycles is not None and ran >= cycles:
+                break
+            if max_cycles_idle is not None and idle >= max_cycles_idle:
+                break
+            if self._stop_event.is_set():
+                if rep.units_drained == 0:
+                    # only backed-off stragglers remain: wait the poll out
+                    # instead of hot-looping on their closed windows (a
+                    # plain clock sleep — the stop-event wait would return
+                    # instantly here, the stop is already set)
+                    self.clock.sleep(poll_s)
+                continue
+            if self._wait(poll_s):
+                continue        # stop() during the sleep: re-check at the top
+        return reports
+
+    def stop(self, *, drain: bool = False) -> None:
+        """Request a graceful stop (thread-safe).
+
+        The in-flight cycle always completes — every target commit is an
+        atomic put-if-absent, so stopping between cycles never leaves torn
+        state.  With ``drain=True`` the daemon keeps cycling until no table
+        has a pending backlog before it stops (repeating ``stop(drain=True)``
+        is idempotent); a plain ``stop()`` downgrades a draining stop to an
+        immediate one — the escape hatch when a pending table fails
+        persistently.  A stop during the poll sleep wakes it immediately.
+        """
+        if self._stop_event.is_set():
+            self._drain_on_stop = self._drain_on_stop and drain
+        else:
+            self._drain_on_stop = drain
+            self._stop_event.set()
+
+    def lag(self) -> dict:
+        """Last known (dataset path) -> pending flag, for monitoring."""
+        return {p: w.pending for p, w in self._watch.items()}
+
+    def _wait(self, seconds: float) -> bool:
+        """Poll-interval wait, woken early by ``stop()``; returns whether a
+        stop is pending.  Falls back to a plain sleep for injected clocks
+        without a ``wait``."""
+        wait = getattr(self.clock, "wait", None)
+        if wait is not None:
+            return bool(wait(self._stop_event, seconds))
+        self.clock.sleep(seconds)
+        return self._stop_event.is_set()
+
+    # ------------------------------------------------------------- internals
+    def _probe(self, ds: DatasetConfig) -> str:
+        """One cheap head probe; the index handle is cached across cycles."""
+        handle = self.cache.index(self.config.source_format, ds.path).handle
+        probe = getattr(handle, "head_token", None)
+        return probe() if probe is not None else handle.current_version()
+
+    def _drain(self, ds: DatasetConfig, w: _TableWatch, token: str,
+               rep: DaemonCycleReport) -> None:
+        """Replan this dataset's cells and drain the actionable units."""
+        planner = SyncPlanner(self.config, self.fs, self.cache,
+                              self.telemetry)
+        units = planner.plan_dataset(ds)
+        rep.units_planned += len(units)
+        executor = SyncExecutor(self.fs, self.cache, self.telemetry,
+                                self.max_workers)
+        results = executor.execute(SyncPlan(units, planner.writers))
+        rep.results.extend(results)
+
+        pending = False
+        failed = False
+        for u, r in zip(units, results):
+            key = (u.dataset, u.target_format)
+            if r.mode == SKIP:
+                rep.units_skipped += 1
+            elif r.mode == ERROR:
+                rep.units_errored += 1
+                failed = True
+                if u.backlog:
+                    rep.lag[key] = u.backlog
+            else:
+                rep.units_drained += 1
+                rep.commits_applied += r.commits_synced
+                left = max(0, u.backlog - r.commits_synced)
+                if left:
+                    rep.lag[key] = left
+                    pending = True
+
+        if failed:
+            # keep the old token so the next eligible cycle replans, and
+            # back the table off — target errors here include storage
+            # retry exhaustion, and hot-looping on them helps nobody
+            w.pending = True
+            self._backoff(ds, w, rep)
+        else:
+            w.token = token
+            w.pending = pending
+            w.failures = 0
+            w.not_before = 0.0
+
+    def _table_failed(self, ds: DatasetConfig, w: _TableWatch,
+                      rep: DaemonCycleReport, phase: str,
+                      err: Exception) -> None:
+        rep.table_errors += 1
+        rep.failures.append((ds.name, phase, str(err)))
+        self.telemetry.bump("daemon.table_errors")
+        self.telemetry.record(ds.name, "*", "error", f"{phase}: {err}")
+        self._backoff(ds, w, rep)
+
+    def _backoff(self, ds: DatasetConfig, w: _TableWatch,
+                 rep: DaemonCycleReport) -> None:
+        w.failures += 1
+        delay = self.opts.backoff_delay_s(w.failures)
+        delay *= 1.0 + self.opts.backoff_jitter * self._rng.random()
+        w.not_before = self.clock.now() + delay
+        self.telemetry.bump("daemon.backoffs")
+        self.telemetry.record(ds.name, "*", "backoff",
+                              f"attempt {w.failures}, retry in {delay:.3f}s")
+
+    def _pending(self) -> bool:
+        return any(w.pending for w in self._watch.values())
+
+
+def run_daemon(config: SyncConfig, fs=None,
+               telemetry: Telemetry | None = None, *,
+               cycles: int | None = None,
+               max_cycles_idle: int | None = None,
+               max_workers: int | None = None,
+               cache: MetadataCache | None = None,
+               clock=None) -> list[DaemonCycleReport]:
+    """Run a continuous-sync daemon to completion (the CLI / service body).
+
+    ``cycles`` bounds the run for scripts and tests; an unbounded call
+    relies on the config's ``maxCyclesIdle`` or an external ``stop()``.
+    Returns the per-cycle reports.
+    """
+    daemon = SyncDaemon(config, fs, telemetry, cache,
+                        max_workers=max_workers, clock=clock)
+    return daemon.run(cycles=cycles, max_cycles_idle=max_cycles_idle)

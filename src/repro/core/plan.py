@@ -43,6 +43,10 @@ class SyncUnit:
     reason: str = ""
     transactional: bool = True      # drain inside one target transaction
     coalesce: bool = False          # fold the range into one net commit
+    backlog: int = 0                # total commits behind BEFORE the
+                                    # maxCommitsPerSync cap; len(commits) <
+                                    # backlog means this unit is a bounded
+                                    # drain and the target stays behind
 
     @property
     def actionable(self) -> bool:
@@ -146,7 +150,8 @@ class SyncPlanner:
                             transactional=txn)
 
         commits = tuple(source.get_commits_since(token))
-        reason = f"{len(commits)} commits behind"
+        backlog = len(commits)
+        reason = f"{backlog} commits behind"
         cap = self.config.max_commits_per_sync
         if cap is not None and len(commits) > cap:
             commits = commits[:cap]
@@ -154,4 +159,5 @@ class SyncPlanner:
         return SyncUnit(ds.name, ds.path, source.format, target_format,
                         INCREMENTAL, source_head=head, commits=commits,
                         reason=reason, transactional=txn,
-                        coalesce=self.config.coalesce_incremental)
+                        coalesce=self.config.coalesce_incremental,
+                        backlog=backlog)

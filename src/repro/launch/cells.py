@@ -7,8 +7,7 @@ these.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
-from functools import partial
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp

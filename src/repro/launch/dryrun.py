@@ -34,6 +34,22 @@ from repro.launch.mesh import make_production_mesh, pod_size      # noqa: E402
 from repro.models.config import SHAPE_CELLS                       # noqa: E402
 
 
+def _named_shardings(mesh, tree):
+    """PartitionSpec / None pytree -> NamedSharding pytree (old-jax jit)."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    def conv(x):
+        if x is None:
+            return NamedSharding(mesh, PartitionSpec())
+        if isinstance(x, PartitionSpec):
+            return NamedSharding(mesh, x)
+        return x
+
+    return jax.tree.map(
+        conv, tree,
+        is_leaf=lambda x: x is None or isinstance(x, PartitionSpec))
+
+
 def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
              grad_accum: int = 1, save: bool = True,
              overrides=None) -> dict:
@@ -51,9 +67,20 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
         cb = build_cell(arch, shape, mesh, grad_accum=grad_accum)
         if overrides:
             cb = overrides(cb)
-        with jax.set_mesh(mesh):
-            jitted = jax.jit(cb.fn, in_shardings=cb.in_shardings,
-                             out_shardings=cb.out_shardings,
+        # jax >= 0.6 accepts bare PartitionSpecs under jax.set_mesh; older
+        # jax wants concrete NamedShardings and enters the Mesh object
+        # itself as the context manager
+        set_mesh = getattr(jax, "set_mesh", None)
+        if set_mesh is None:
+            in_sh = _named_shardings(mesh, cb.in_shardings)
+            out_sh = _named_shardings(mesh, cb.out_shardings)
+            mesh_cm = mesh
+        else:
+            in_sh, out_sh = cb.in_shardings, cb.out_shardings
+            mesh_cm = set_mesh(mesh)
+        with mesh_cm:
+            jitted = jax.jit(cb.fn, in_shardings=in_sh,
+                             out_shardings=out_sh,
                              donate_argnums=cb.donate_argnums)
             lowered = jitted.lower(*cb.args)
             t1 = time.time()
@@ -61,6 +88,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
             t2 = time.time()
         mem = compiled.memory_analysis()
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, list):     # newer jax returns [per-device dict]
+            ca = ca[0] if ca else {}
         hlo = analyze(compiled.as_text(), pod_size(mesh))
         rec.update({
             "ok": True,

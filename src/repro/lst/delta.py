@@ -165,6 +165,20 @@ class DeltaTable:
             raise FileNotFoundError("empty delta log")
         return str(vs[-1])
 
+    def head(self) -> str:
+        """The head commit id — one log-tail listing, no action reads."""
+        return self.current_version()
+
+    def head_token(self) -> str:
+        """O(1) change-detection probe: an opaque token that moves iff the
+        table head moved.  One ``list_dir`` of ``_delta_log/`` — no log
+        replay, no action reads — so an always-on watcher polling every
+        table each cycle pays exactly one storage request per quiet table.
+        An absent/empty log yields ``""`` (the "no table yet" token).
+        """
+        vs = self._list_versions()
+        return str(vs[-1]) if vs else ""
+
     def versions(self) -> list[str]:
         return [str(v) for v in self._list_versions()]
 

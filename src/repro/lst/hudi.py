@@ -185,15 +185,25 @@ class HudiTable:
                 out[k] = v
         return out
 
-    def _timeline(self) -> list[tuple[str, str]]:
-        """Completed instants: [(ts, action)] in timeline order."""
+    @staticmethod
+    def _completed_instants(names: list[str]) -> list[tuple[str, str]]:
+        """``.hoodie/`` entries -> [(ts, action)] of COMPLETED instants, in
+        timeline order.  The one place that knows which filenames are
+        visible commits (requested/inflight markers are not) — shared by
+        the full timeline scan and the daemon's ``head_token`` probe so the
+        visibility rule cannot drift between them."""
         out = []
-        for n in self.fs.list_dir(join(self.base, HOODIE_DIR)):
+        for n in names:
             parts = n.split(".")
             if len(parts) == 2 and parts[0].isdigit() and \
                     parts[1] in ("commit", "replacecommit"):
                 out.append((parts[0], parts[1]))
         return sorted(out)
+
+    def _timeline(self) -> list[tuple[str, str]]:
+        """Completed instants: [(ts, action)] in timeline order."""
+        return self._completed_instants(
+            self.fs.list_dir(join(self.base, HOODIE_DIR)))
 
     def _instant_payload(self, ts: str, action: str) -> dict:
         return json.loads(self.fs.read_bytes(
@@ -214,6 +224,24 @@ class HudiTable:
     def current_version(self) -> str:
         tl = self._timeline()
         return tl[-1][0] if tl else "0"
+
+    def head(self) -> str:
+        """The newest completed instant — one timeline listing."""
+        return self.current_version()
+
+    def head_token(self) -> str:
+        """O(1) change-detection probe: an opaque token that moves iff a
+        new instant completed.  One ``list_dir`` of ``.hoodie/`` — only
+        *completed* instants count (requested/inflight markers are not yet
+        visible commits), so the token moves exactly when the atomic commit
+        point lands.  An absent table yields ``""``; an empty-but-created
+        timeline yields ``"0"`` (the pre-first-instant version).
+        """
+        names = self.fs.list_dir(join(self.base, HOODIE_DIR))
+        if not names:
+            return ""
+        completed = self._completed_instants(names)
+        return completed[-1][0] if completed else "0"
 
     def versions(self) -> list[str]:
         return [ts for ts, _ in self._timeline()]

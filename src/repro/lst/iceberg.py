@@ -191,6 +191,32 @@ class IcebergTable:
         _, meta = self._read_metadata()
         return str(meta["current-snapshot-id"])
 
+    def head(self) -> str:
+        """The head snapshot id (reads the current metadata JSON)."""
+        return self.current_version()
+
+    def head_token(self) -> str:
+        """O(1) change-detection probe: an opaque token that moves iff the
+        table advanced.  One GET of ``version-hint.text`` — every commit
+        rewrites the hint right after its metadata put, so the hint number
+        moves with the head and no ``v{N}.metadata.json`` is parsed.  Falls
+        back to listing the metadata dir when the hint is missing (foreign
+        writer); an absent table yields ``""``.
+
+        The token is the *metadata file* version, not the snapshot id: two
+        different tokens can name the same snapshot (e.g. a properties-only
+        commit), which at worst causes one spurious replan — never a missed
+        change.
+        """
+        try:
+            n = self.fs.read_bytes(self._hint_path()).decode().strip()
+            return f"hint:{n}"
+        except FileNotFoundError:
+            versions = [int(x[1:-len(".metadata.json")])
+                        for x in self.fs.list_dir(join(self.base, META_DIR))
+                        if x.startswith("v") and x.endswith(".metadata.json")]
+            return f"list:{max(versions)}" if versions else ""
+
     def versions(self) -> list[str]:
         _, meta = self._read_metadata()
         return [str(s["snapshot-id"]) for s in

@@ -12,13 +12,12 @@ from __future__ import annotations
 
 import uuid
 from dataclasses import dataclass
-from typing import Callable, Iterator, Mapping
+from typing import Iterator, Mapping
 
 import numpy as np
 
 from repro.lst import chunkfile, delta, hudi, iceberg
 from repro.lst.chunkfile import DataFileMeta
-from repro.lst.fs import join
 from repro.lst.schema import PartitionSpec, Schema, TableState
 
 FORMATS = {"delta": delta.DeltaTable, "iceberg": iceberg.IcebergTable,

@@ -14,7 +14,6 @@ the lowering/roofline path and the numerical oracle's substrate.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp

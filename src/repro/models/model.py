@@ -14,7 +14,6 @@ Three entry points per model (the dry-run lowers each):
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -281,7 +280,8 @@ class Model:
             body = jax.checkpoint(lambda c, p: cycle_fn(c, p, None),
                                   policy=policy)
         elif cache is None:
-            body = lambda c, p: cycle_fn(c, p, None)
+            def body(c, p):
+                return cycle_fn(c, p, None)
         else:
             body = None
 

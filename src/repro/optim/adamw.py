@@ -30,7 +30,8 @@ class AdamWConfig:
 
 
 def adamw_init(params):
-    zeros = lambda p: jnp.zeros(p.shape, f32)
+    def zeros(p):
+        return jnp.zeros(p.shape, f32)
     return {
         "step": jnp.zeros((), jnp.int32),
         "m": jax.tree.map(zeros, params),

@@ -13,13 +13,12 @@
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.model import Model
-from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim import AdamWConfig, adamw_update
 
 f32 = jnp.float32
 
@@ -108,14 +107,14 @@ def make_train_step(model: Model, opt_cfg: AdamWConfig, *,
 
     def train_step(params, opt_state, batch):
         if grad_accum == 1:
-            (loss, aux), grads = grad_fn(params, batch)
+            (loss, _aux), grads = grad_fn(params, batch)
             grads = pin(grads)
         else:
             def micro(carry, mb):
-                acc, l = carry
+                acc, lacc = carry
                 (lo, _a), g = grad_fn(params, mb)
                 acc = jax.tree.map(lambda a, b: a + b.astype(f32), acc, g)
-                return (acc, l + lo), None
+                return (acc, lacc + lo), None
 
             zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, f32), params)
             mbs = jax.tree.map(
@@ -125,7 +124,6 @@ def make_train_step(model: Model, opt_cfg: AdamWConfig, *,
                 micro, (zeros, jnp.zeros((), f32)), mbs)
             grads = pin(jax.tree.map(lambda g: g / grad_accum, gsum))
             loss = lsum / grad_accum
-            aux = {}
         new_params, new_opt, om = adamw_update(params, grads, opt_state,
                                                opt_cfg)
         metrics = {"loss": loss, **om}

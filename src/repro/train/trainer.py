@@ -20,7 +20,6 @@ import time
 from dataclasses import dataclass, field
 
 import jax
-import numpy as np
 
 from repro.checkpoint import LSTCheckpointManager
 from repro.data import LakeDataLoader

@@ -5,11 +5,10 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import LSTCheckpointManager
 from repro.data import LakeDataLoader, write_synth_corpus
-from repro.lst import LakeTable, LocalFS
+from repro.lst import LakeTable
 
 
 def _tree(seed=0):

@@ -68,7 +68,6 @@ def test_elastic_restore_different_topology(world):
     mgr = LSTCheckpointManager(fs, f"{root}/ckpt", fmt="delta",
                                sync_targets=())
     step, flat = mgr.restore()
-    mesh = jax.make_mesh((1,), ("data",))
     sharded = {k: jax.device_put(v) for k, v in list(flat.items())[:3]}
     for k, v in sharded.items():
         assert tuple(v.shape) == tuple(flat[k].shape)

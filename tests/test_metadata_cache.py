@@ -15,7 +15,7 @@ import pytest
 
 from repro.core import (MetadataCache, SyncConfig, TableMetadataIndex,
                         run_sync)
-from repro.lst import FORMATS, LakeTable, LocalFS
+from repro.lst import LakeTable, LocalFS
 from repro.lst.fs import join
 from repro.lst.schema import Field, PartitionSpec, Schema
 

@@ -5,12 +5,11 @@ plan from execute)."""
 import tempfile
 
 import numpy as np
-import pytest
 
 from repro.core import SyncConfig, XTableSyncer, run_sync
 from repro.core.plan import ERROR, FULL, INCREMENTAL, SKIP, SyncPlanner
 from repro.core.targets import SOURCE_FMT_KEY, TOKEN_KEY
-from repro.lst import LakeTable, LocalFS
+from repro.lst import LakeTable
 from repro.lst.fs import join
 from repro.lst.iceberg import IcebergTable
 from repro.lst.schema import Field, PartitionSpec, Schema

@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 from repro.lst import LakeTable, chunkfile
-from repro.lst.fs import LocalFS, PutIfAbsentError, join
+from repro.lst.fs import PutIfAbsentError, join
 from repro.lst.schema import Field, PartitionSpec, Schema
 from repro.lst.table import Predicate
 

@@ -12,7 +12,6 @@ format:
     partial multi-target failure) converges without corruption.
 """
 
-import os
 import tempfile
 
 import numpy as np
@@ -155,7 +154,7 @@ def test_sync_idempotent_and_skip(fs):
     cfg = SyncConfig.from_dict({"sourceFormat": "HUDI",
                                 "targetFormats": ["DELTA", "ICEBERG"],
                                 "datasets": [{"tableBasePath": base}]})
-    r1 = run_sync(cfg, fs)
+    run_sync(cfg, fs)
     r2 = run_sync(cfg, fs)
     assert all(r.mode == "SKIP" for r in r2), r2
     d = LakeTable.open(fs, base, "delta")
