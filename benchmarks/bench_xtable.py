@@ -18,6 +18,11 @@ paper without numbered tables, so each benchmark pins one §3 property):
 * continuous     — the always-on daemon: steady-state freshness lag and
                    per-cycle storage requests for poll-drain cycles vs.
                    one-shot full resyncs under a scripted append workload
+* write pipeline — the drain's WRITE side: serial puts vs. staged
+                   non-commit objects flushed in pipelined write_many
+                   rounds (RTT sweep, serial round-trips per commit), plus
+                   the daemon's per-cycle head memoization (source-head
+                   reads per changed cycle, 3 -> 1)
 """
 
 from __future__ import annotations
@@ -499,7 +504,138 @@ def bench_continuous_sync(report):
            f"reqs {rq_f / max(rq_d, 1e-9):.1f}x")
 
 
+def bench_write_pipeline(report):
+    """The write-RTT term of a high-latency drain: a 16-commit transactional
+    drain into iceberg + hudi, serial writes (``pipelineDepth: 1`` — every
+    staged object pays its own round trip) vs. pipelined staged flushes
+    (depth 16), swept over RTT.
+
+    The drain runs as a fresh sync process over a pre-synced history; reads
+    are batched identically in both arms (PR 3), so the spread is the write
+    side: per commit the serial arm pays one RTT per object (manifests,
+    manifest-lists, requested/inflight markers, per-commit hint moves),
+    while the pipelined arm overlaps every non-commit object of the WHOLE
+    chain in ~1 write_many round and pays serial RTTs only for the ordered
+    commit-point puts.  Derived columns carry the simulated store's
+    *serial round-trip* census (a batch of N counts ceil(N/depth)) per
+    commit, and the speedup at the same RTT.
+
+    A final row pins the daemon's per-cycle head memoization: source-head
+    reads during one CHANGED cycle, legacy (probe + planner head read +
+    refresh head read) vs. hinted (the probe IS the cycle's head read).
+    """
+    backlog_n, history_n = 16, 4 if QUICK else 16
+    rtts = (0, 10) if QUICK else (0, 5, 10, 20)
+
+    def build(raw):
+        base = "bkt/wp"
+        t = LakeTable.create(raw, base, SCHEMA, "delta",
+                             PartitionSpec(["part"]),
+                             {"delta.checkpointInterval": "100000"})
+        rng = np.random.default_rng(0)
+
+        def grow(k):
+            for _ in range(k):
+                n = 64
+                t.append({"k": rng.integers(0, 1 << 30, n),
+                          "part": np.array([f"p{i % 4}" for i in range(n)]),
+                          "val": rng.random(n)})
+
+        cfg = SyncConfig.from_dict({
+            "sourceFormat": "DELTA", "targetFormats": ["ICEBERG", "HUDI"],
+            "datasets": [{"tableBasePath": "mem://bkt/wp"}]})
+        grow(2)
+        res = run_sync(cfg, layer_fs(raw))
+        assert all(r.ok and r.mode == "FULL" for r in res)
+        grow(history_n)                      # pre-synced history
+        res = run_sync(cfg, layer_fs(raw))
+        assert all(r.ok and r.mode == "INCREMENTAL" for r in res)
+        grow(backlog_n)                      # the measured backlog
+        return cfg
+
+    from repro.lst.storage import SimulatedObjectStore
+
+    serial_dt = {}
+    for rtt in rtts:
+        for label, depth in (("serial", 1), ("pipelined", 16)):
+            raw = MemoryFS()
+            cfg = build(raw)
+            sim = SimulatedObjectStore(
+                raw, StorageProfile(rtt_ms=rtt, pipeline_depth=depth))
+            fs = layer_fs(sim, retry=RetryPolicy())
+            rounds0, puts0 = sim.serial_rounds(), layer_puts(fs)
+            t0 = time.perf_counter()
+            res = run_sync(cfg, fs)
+            dt = time.perf_counter() - t0
+            assert all(r.ok and r.mode == "INCREMENTAL" and
+                       r.commits_synced == backlog_n for r in res)
+            if label == "serial":
+                serial_dt[rtt] = dt
+            rounds = sim.serial_rounds() - rounds0
+            report(f"write_pipeline.rtt{rtt}.{label}", dt * 1e6,
+                   f"serial_rtts/commit={rounds / backlog_n:.1f} "
+                   f"puts={layer_puts(fs) - puts0} "
+                   f"speedup={serial_dt[rtt] / max(dt, 1e-9):.2f}x")
+
+    # -- per-cycle head memoization: source-head reads on a CHANGED cycle
+    from repro.core import ManualClock, SyncDaemon, SyncPlanner
+
+    class _HeadReadCountingFS(MemoryFS):
+        head_reads = 0
+
+        def list_dir(self, path):
+            if path.rstrip("/").endswith("_delta_log"):
+                self.head_reads += 1
+            return super().list_dir(path)
+
+    def changed_cycle_head_reads(hinted: bool) -> int:
+        raw = _HeadReadCountingFS()
+        base = "bkt/wp"
+        t = LakeTable.create(raw, base, SCHEMA, "delta",
+                             PartitionSpec(["part"]),
+                             {"delta.checkpointInterval": "100000"})
+        rng = np.random.default_rng(0)
+        for _ in range(3):
+            t.append({"k": rng.integers(0, 99, 8),
+                      "part": np.array([f"p{i % 4}" for i in range(8)]),
+                      "val": rng.random(8)})
+        cfg = SyncConfig.from_dict({
+            "sourceFormat": "DELTA", "targetFormats": ["ICEBERG"],
+            "datasets": [{"tableBasePath": base}]})
+        fs = layer_fs(raw)
+        daemon = SyncDaemon(cfg, fs, clock=ManualClock())
+        daemon.run_cycle()                   # FULL bootstrap
+        assert daemon.run_cycle().idle
+        t.append({"k": rng.integers(0, 99, 8),
+                  "part": np.array([f"p{i % 4}" for i in range(8)]),
+                  "val": rng.random(8)})
+        raw.head_reads = 0
+        if hinted:
+            rep = daemon.run_cycle()         # probe doubles as the hint
+            assert rep.units_drained == 1
+        else:
+            # the pre-memoization sequence: probe, then an unhinted replan
+            # (planner head read + index refresh head read)
+            idx = daemon.cache.index("delta", base)
+            idx.probe()
+            idx.end_cycle()
+            planner = SyncPlanner(cfg, fs, daemon.cache)
+            units = planner.plan_dataset(cfg.datasets[0])
+            assert units[0].mode == "INCREMENTAL"
+        return raw.head_reads
+
+    legacy, hinted = changed_cycle_head_reads(False), \
+        changed_cycle_head_reads(True)
+    report("write_pipeline.head_reads.changed_cycle", float(hinted),
+           f"hinted={hinted} legacy={legacy} (per table per cycle)")
+
+
+def layer_puts(fs) -> int:
+    return fs.stats().put
+
+
 ALL = [bench_low_overhead, bench_incremental_vs_full, bench_omni_matrix,
        bench_file_count_scaling, bench_checkpoint_throughput,
        bench_serial_vs_concurrent, bench_backlog_drain,
-       bench_object_store_sync, bench_continuous_sync]
+       bench_object_store_sync, bench_continuous_sync,
+       bench_write_pipeline]

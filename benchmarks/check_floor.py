@@ -1,0 +1,77 @@
+"""Perf-floor gate: fail CI when the O(change) rows regress badly.
+
+Compares a fresh ``--quick`` benchmark JSON against the committed
+``BENCH_xtable.quick.json`` baseline and exits non-zero when any guarded
+row is more than ``--factor`` (default 3x) slower than its baseline.  The
+guarded rows are the ones that encode the architectural guarantees this
+repo's PRs established — the transactional backlog drain (``drain.*.txn``)
+and the pipelined write path (``write_pipeline.*``) — so silently
+reverting to a per-commit or serial-write code path fails the job even
+though every correctness test would still pass.
+
+The factor is deliberately loose: CI runners are noisy, and the guarded
+speedups are ~4x+, so a 3x regression means the mechanism is gone, not
+that the machine was busy.  Rows present on only one side are ignored
+(new benchmarks should not fail the gate retroactively), but an EMPTY
+intersection fails — a renamed row must update the baseline knowingly.
+
+Usage: ``python benchmarks/check_floor.py NEW.json --baseline OLD.json``
+"""
+
+import argparse
+import fnmatch
+import json
+import sys
+
+GUARDED = ("drain.*.txn", "write_pipeline.*")
+# derived-metric rows (counters, not wall time) are not floor-checked
+EXCLUDE = ("write_pipeline.head_reads.*",)
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    return {r["name"]: float(r["us"]) for r in data.get("rows", [])}
+
+
+def guarded(name: str) -> bool:
+    return any(fnmatch.fnmatch(name, g) for g in GUARDED) and \
+        not any(fnmatch.fnmatch(name, e) for e in EXCLUDE)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("new", help="freshly produced quick-bench JSON")
+    ap.add_argument("--baseline", default="BENCH_xtable.quick.json",
+                    help="committed baseline JSON (default: the tracked "
+                         "BENCH_xtable.quick.json)")
+    ap.add_argument("--factor", type=float, default=3.0,
+                    help="fail when new > factor * baseline (default 3)")
+    args = ap.parse_args(argv)
+
+    new, base = load_rows(args.new), load_rows(args.baseline)
+    checked, failures = 0, []
+    for name, base_us in sorted(base.items()):
+        if not guarded(name) or name not in new:
+            continue
+        checked += 1
+        ratio = new[name] / max(base_us, 1e-9)
+        status = "FAIL" if ratio > args.factor else "ok"
+        print(f"{status:4s} {name}: {new[name]:.1f}us vs baseline "
+              f"{base_us:.1f}us ({ratio:.2f}x)")
+        if ratio > args.factor:
+            failures.append(name)
+    if checked == 0:
+        print("# perf floor: no guarded rows matched between "
+              f"{args.new} and {args.baseline}", file=sys.stderr)
+        sys.exit(1)
+    if failures:
+        print(f"# perf floor: {len(failures)} of {checked} guarded rows "
+              f"regressed >{args.factor}x: {failures}", file=sys.stderr)
+        sys.exit(1)
+    print(f"# perf floor: {checked} guarded rows within {args.factor}x "
+          f"of baseline")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,10 @@ Accepts YAML text, a file path, or a plain dict.  Optional knobs:
   single net target commit (freshness over 1:1 history fidelity).
 * ``maxCommitsPerSync`` (default unlimited) — cap the commits one run
   applies; the next run continues from the recorded sync token.
+* ``manifestCompactionThreshold`` (default off) — iceberg targets: when a
+  commit would leave more than this many manifests in the manifest list
+  (long incremental chains grow one small manifest per commit), fold them
+  all into one, bounding snapshot-read amplification.
 * ``storage`` (default local, no injection) — storage-backend behavior:
   any of ``rttMs`` / ``faultRate`` / ``ambiguousPutRate`` wraps the backend
   in a simulated object store; ``pipelineDepth`` / ``seed`` shape that
@@ -155,6 +159,9 @@ class SyncConfig:
     # cap how many backlog commits one sync run applies (None = all); the
     # target advances to the cap and the next run continues from there
     max_commits_per_sync: int | None = None
+    # iceberg targets: fold the manifest list into one manifest whenever a
+    # commit would leave more than this many (None = never compact)
+    manifest_compaction_threshold: int | None = None
     # storage-backend behavior (latency/fault injection, retry policy)
     storage: StorageOptions = field(default_factory=StorageOptions)
     # continuous-sync daemon scheduling (poll interval, idle stop, backoff)
@@ -169,6 +176,9 @@ class SyncConfig:
         if self.max_commits_per_sync is not None \
                 and self.max_commits_per_sync < 1:
             raise ValueError("maxCommitsPerSync must be >= 1")
+        if self.manifest_compaction_threshold is not None \
+                and self.manifest_compaction_threshold < 1:
+            raise ValueError("manifestCompactionThreshold must be >= 1")
 
     @staticmethod
     def from_dict(d: dict) -> "SyncConfig":
@@ -176,6 +186,7 @@ class SyncConfig:
             DatasetConfig(x["tableBasePath"], x.get("tableName"))
             for x in d.get("datasets", []))
         mcps = d.get("maxCommitsPerSync")
+        mct = d.get("manifestCompactionThreshold")
         return SyncConfig(
             source_format=d["sourceFormat"].lower(),
             target_formats=tuple(t.lower() for t in d["targetFormats"]),
@@ -184,6 +195,8 @@ class SyncConfig:
             transactional_targets=bool(d.get("transactionalTargets", True)),
             coalesce_incremental=bool(d.get("coalesceIncremental", False)),
             max_commits_per_sync=int(mcps) if mcps is not None else None,
+            manifest_compaction_threshold=int(mct) if mct is not None
+            else None,
             storage=StorageOptions.from_dict(d.get("storage", {})),
             daemon=DaemonOptions.from_dict(d.get("daemon", {})))
 

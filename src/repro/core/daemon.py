@@ -201,19 +201,28 @@ class SyncDaemon:
                 rep.backed_off += 1
                 continue
             try:
+                # the probe doubles as this cycle's head hint: the planner's
+                # current_commit() and the index refresh consume the SAME
+                # one-request probe instead of re-reading the source head
                 token = self._probe(ds)
             except Exception as e:
                 self._table_failed(ds, w, rep, "probe", e)
+                self._end_cycle(ds)
                 continue
             rep.probed += 1
             if token == w.token and not w.pending:
                 rep.quiet += 1
+                self._end_cycle(ds)
                 continue
             rep.changed += 1
             try:
                 self._drain(ds, w, token, rep)
             except Exception as e:
                 self._table_failed(ds, w, rep, "drain", e)
+            finally:
+                # the hint is scoped to THIS cycle: a lingering hint would
+                # pin refresh() to a past head forever
+                self._end_cycle(ds)
 
         if before is not None:
             after = stats_fn().as_dict()
@@ -307,20 +316,26 @@ class SyncDaemon:
 
     # ------------------------------------------------------------- internals
     def _probe(self, ds: DatasetConfig) -> str:
-        """One cheap head probe; the index handle is cached across cycles."""
-        handle = self.cache.index(self.config.source_format, ds.path).handle
-        probe = getattr(handle, "head_token", None)
-        return probe() if probe is not None else handle.current_version()
+        """One cheap head probe, memoized on the index as the cycle's head
+        hint; the index handle is cached across cycles."""
+        return self.cache.index(self.config.source_format, ds.path).probe()
+
+    def _end_cycle(self, ds: DatasetConfig) -> None:
+        idx = self.cache.peek(self.config.source_format, ds.path)
+        if idx is not None:
+            idx.end_cycle()
 
     def _drain(self, ds: DatasetConfig, w: _TableWatch, token: str,
                rep: DaemonCycleReport) -> None:
         """Replan this dataset's cells and drain the actionable units."""
         planner = SyncPlanner(self.config, self.fs, self.cache,
                               self.telemetry)
-        units = planner.plan_dataset(ds)
+        units = planner.plan_dataset(ds, head_hint=token)
         rep.units_planned += len(units)
-        executor = SyncExecutor(self.fs, self.cache, self.telemetry,
-                                self.max_workers)
+        executor = SyncExecutor(
+            self.fs, self.cache, self.telemetry, self.max_workers,
+            manifest_compaction_threshold=self.config
+            .manifest_compaction_threshold)
         results = executor.execute(SyncPlan(units, planner.writers))
         rep.results.extend(results)
 

@@ -57,11 +57,15 @@ class SyncExecutor:
 
     def __init__(self, fs, cache: MetadataCache | None = None,
                  telemetry: Telemetry | None = None,
-                 max_workers: int | None = None):
+                 max_workers: int | None = None, *,
+                 manifest_compaction_threshold: int | None = None):
         self.fs = fs
         self.cache = cache or MetadataCache(fs)
         self.telemetry = telemetry or Telemetry()
         self.max_workers = max_workers
+        # threaded into fallback-constructed targets so a unit whose writer
+        # is missing from plan.writers behaves like a planner-built one
+        self.manifest_compaction_threshold = manifest_compaction_threshold
         self._writers: dict = {}
 
     # ------------------------------------------------------------------ api
@@ -123,7 +127,9 @@ class SyncExecutor:
                              self.cache.index(unit.source_format,
                                               unit.base_path))
         target = self._writers.get((unit.base_path, unit.target_format)) \
-            or make_target(unit.target_format, self.fs, unit.base_path)
+            or make_target(unit.target_format, self.fs, unit.base_path,
+                           manifest_compaction_threshold=self
+                           .manifest_compaction_threshold)
 
         # transactional drain: the target's metadata is parsed once at the
         # first commit and threaded through the rest in memory, so an

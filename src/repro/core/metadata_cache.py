@@ -43,10 +43,74 @@ class TableMetadataIndex:
         self._order: list[str] = []
         self._entries: dict[str, CommitEntry] = {}
         self._state_memo: dict[str, TableState] = {}
+        # per-cycle head hint (see probe()/hint_head()/end_cycle()):
+        # _hint_token/_hint_state hold a just-probed head; _built_token is
+        # the token the index was last refreshed AGAINST (None when the
+        # index was last refreshed by its own head read)
+        self._hint_token: str | None = None
+        self._hint_state = None
+        self._built_token: str | None = None
 
     # ------------------------------------------------------------- building
     def head(self) -> str:
+        """The head commit id.
+
+        Under a consumed per-cycle hint this is served from the index (the
+        hinted refresh already read the log tail); otherwise it is one
+        storage probe (``handle.current_version()``) — for iceberg a full
+        metadata-discovery round, which is exactly what the hint removes.
+        """
+        with self._lock:
+            hinted = self._hint_token
+        if hinted:
+            self.refresh()
+            with self._lock:
+                if self._built_token == hinted and \
+                        self._built_head is not None:
+                    return self._built_head
         return self.handle.current_version()
+
+    # ------------------------------------------------- per-cycle head hints
+    def probe(self) -> str:
+        """ONE-request head probe that doubles as this cycle's head hint.
+
+        Returns the opaque head token (what ``head_token()`` returns) and
+        memoizes the probe's raw payload — delta: the head version number,
+        iceberg: the hinted metadata-file version, hudi: the parsed
+        completed-instant listing — so the planner's ``current_commit()``
+        and this index's ``refresh()`` consume the SAME probe instead of
+        re-reading the source head ~3x per changed cycle.  The hint is
+        scoped to one daemon cycle: callers must ``end_cycle()`` when the
+        cycle's drain finishes (refresh() is the one staleness point, and
+        a lingering hint would pin it to a past head forever).
+        """
+        probe_fn = getattr(self.handle, "head_probe", None)
+        if probe_fn is not None:
+            token, state = probe_fn()
+        else:
+            tok_fn = getattr(self.handle, "head_token", None)
+            token = tok_fn() if tok_fn is not None \
+                else self.handle.current_version()
+            state = None
+        with self._lock:
+            self._hint_token, self._hint_state = token, state
+        return token
+
+    def hint_head(self, token: str | None) -> None:
+        """Install an externally probed head token as this cycle's hint
+        (planner-facing; a daemon that already ran ``probe()`` on this
+        index is a no-op).  Without the probe's raw payload the hinted
+        refresh still replays the tail, it just cannot skip the head
+        listing — the token alone still collapses the *repeat* head reads.
+        """
+        with self._lock:
+            if token and token != self._hint_token:
+                self._hint_token, self._hint_state = token, None
+
+    def end_cycle(self) -> None:
+        """Drop the per-cycle head hint (idempotent)."""
+        with self._lock:
+            self._hint_token = self._hint_state = None
 
     def ensure_built(self) -> "TableMetadataIndex":
         """Build from ONE log replay; no staleness check once built.
@@ -58,7 +122,10 @@ class TableMetadataIndex:
         """
         with self._lock:
             if self._built_head is None:
-                self._rebuild()
+                if self._hint_token:
+                    self._refresh_hinted(self._hint_token, self._hint_state)
+                else:
+                    self._rebuild()
             return self
 
     def refresh(self) -> "TableMetadataIndex":
@@ -69,9 +136,22 @@ class TableMetadataIndex:
         the index — O(new commits), not O(history).  A full rebuild happens
         only when there is no index yet, or when the anchor commit vanished
         from the log (vacuum / divergent rewrite).
+
+        Under a per-cycle head hint (``probe()`` / ``hint_head()``) the
+        staleness check costs ZERO storage requests: a hint matching the
+        token the index was last refreshed against is a no-op, and a moved
+        hint feeds the probe's payload straight into ``replay(probe=...)``
+        so even the tail replay skips head rediscovery.  The new built head
+        comes from the replayed entries themselves — no separate head read.
         """
         with self._lock:
-            head = self.head()
+            if self._hint_token:
+                if self._built_token == self._hint_token:
+                    return self
+                return self._refresh_hinted(self._hint_token,
+                                            self._hint_state)
+            head = self.handle.current_version()
+            self._built_token = None
             if self._built_head == head:
                 return self
             if self._built_head is None:
@@ -84,23 +164,58 @@ class TableMetadataIndex:
             except (KeyError, FileNotFoundError, ValueError):
                 self._rebuild()
                 return self
-            self.tail_replays += 1
-            for e in entries:
-                if e.version not in self._entries:
-                    self._order.append(e.version)
-                self._entries[e.version] = e
+            self._splice(entries)
             self._built_head = head
             return self
 
-    def _rebuild(self) -> None:
-        head = self.head()
-        base, entries = self.handle.replay()
+    def _refresh_hinted(self, token: str, state) -> "TableMetadataIndex":
+        """Refresh against a probed head: the probe IS the head read."""
+        if self._built_head is None:
+            self._rebuild(probe=state)
+            self._built_token = token
+            return self
+        try:
+            _, entries = self._replay(since=self._built_head,
+                                      seed=self._entries.get(self._built_head),
+                                      probe=state)
+        except (KeyError, FileNotFoundError, ValueError):
+            self._rebuild(probe=state)
+            self._built_token = token
+            return self
+        self._splice(entries)
+        if entries:
+            self._built_head = entries[-1].version
+        self._built_token = token
+        return self
+
+    def _splice(self, entries) -> None:
+        self.tail_replays += 1
+        for e in entries:
+            if e.version not in self._entries:
+                self._order.append(e.version)
+            self._entries[e.version] = e
+
+    def _replay(self, *, since=None, seed=None, probe=None):
+        if probe is None:   # duck-typed handles need not accept probe=
+            return self.handle.replay(since=since, seed=seed)
+        return self.handle.replay(since=since, seed=seed, probe=probe)
+
+    def _rebuild(self, probe=None) -> None:
+        base, entries = self._replay(probe=probe)
         self.replays += 1
         self._base = base
         self._order = [e.version for e in entries]
         self._entries = {e.version: e for e in entries}
         self._state_memo = {}
-        self._built_head = head
+        # the head falls out of the replay itself (last entry / the base
+        # state) — reading it separately would be one more round trip AND
+        # racy against a writer landing between the two reads
+        if entries:
+            self._built_head = entries[-1].version
+        elif base is not None:
+            self._built_head = base.version
+        else:
+            self._built_head = self.handle.current_version()
 
     # -------------------------------------------------------------- queries
     def versions(self) -> list[str]:
@@ -184,6 +299,13 @@ class MetadataCache:
                 idx = TableMetadataIndex(FORMATS[fmt].open(self.fs, base_path))
                 self._indexes[key] = idx
             return idx
+
+    def peek(self, fmt: str, base_path: str) -> TableMetadataIndex | None:
+        """The cached index if one exists — never opens the handle (the
+        daemon's end-of-cycle hint cleanup must not fail on a table whose
+        probe already failed to open)."""
+        with self._lock:
+            return self._indexes.get((fmt, base_path))
 
     def total_replays(self) -> int:
         with self._lock:

@@ -98,10 +98,23 @@ class SyncPlanner:
         plan.writers = self.writers
         return plan
 
-    def plan_dataset(self, ds: DatasetConfig) -> list:
+    def plan_dataset(self, ds: DatasetConfig,
+                     head_hint: str | None = None) -> list:
+        """Plan every (``ds``, target) cell.
+
+        ``head_hint`` — a head token the caller just probed (the daemon's
+        watch phase) — is installed on the dataset's metadata index for the
+        duration of this planning pass, so ``current_commit()`` and the
+        index's tail refresh consume that one probe instead of re-reading
+        the source head; the daemon clears it at cycle end (the hint is
+        scoped to a single cycle — ``refresh()`` stays the one explicit
+        staleness point).
+        """
         src_fmt = self.config.source_format
-        source = make_source(src_fmt, self.fs,
-                             ds.path, self.cache.index(src_fmt, ds.path))
+        index = self.cache.index(src_fmt, ds.path)
+        if head_hint:
+            index.hint_head(head_hint)
+        source = make_source(src_fmt, self.fs, ds.path, index)
         head = source.current_commit()
         units = []
         for tf in self.config.target_formats:
@@ -118,7 +131,10 @@ class SyncPlanner:
     # ------------------------------------------------------------- internals
     def _plan_one(self, ds: DatasetConfig, source, head: str,
                   target_format: str) -> SyncUnit:
-        target = make_target(target_format, self.fs, ds.path)
+        target = make_target(
+            target_format, self.fs, ds.path,
+            manifest_compaction_threshold=self.config
+            .manifest_compaction_threshold)
         token = target.get_sync_token()
         src_fmt_on_target = target.get_sync_source_format()
         self.writers[(ds.path, target_format)] = target

@@ -80,8 +80,10 @@ class XTableSyncer:
 
     # ------------------------------------------------------------- internals
     def _execute(self, plan: SyncPlan) -> list[SyncResult]:
-        executor = SyncExecutor(self.fs, self.cache, self.telemetry,
-                                self.max_workers)
+        executor = SyncExecutor(
+            self.fs, self.cache, self.telemetry, self.max_workers,
+            manifest_compaction_threshold=self.config
+            .manifest_compaction_threshold)
         return executor.execute(plan)
 
 

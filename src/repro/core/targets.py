@@ -40,7 +40,8 @@ class _HandleTarget:
     handle_cls = None
     format = "?"
 
-    def __init__(self, fs, base_path: str):
+    def __init__(self, fs, base_path: str, *,
+                 manifest_compaction_threshold: int | None = None):
         self.fs = fs
         self.base = base_path
         self.handle = (self.handle_cls.open(fs, base_path)
@@ -50,6 +51,12 @@ class _HandleTarget:
         self._state = None      # cached sync-state dict (one tail read)
         self._txn = None        # active handle transaction (None = direct)
         self._in_txn = False
+        # format-specific transaction knobs (iceberg: manifest compaction)
+        self._txn_opts: dict = {}
+        if manifest_compaction_threshold is not None \
+                and self.format == "iceberg":
+            self._txn_opts["manifest_compaction_threshold"] = \
+                manifest_compaction_threshold
 
     # -- target-side metadata cache ----------------------------------------
     # the target's own log is replayed at most once per writer instance;
@@ -69,26 +76,48 @@ class _HandleTarget:
     # -- transactions -------------------------------------------------------
     # inside a transaction the handle's parsed metadata (version counter /
     # metadata dict + manifest list / timeline schema + properties) is read
-    # once and threaded through every commit in memory; each commit is still
-    # flushed immediately as an atomic put-if-absent write, so a crash
-    # mid-unit leaves a valid prefix and recovery stays "run it again".
+    # once and threaded through every commit in memory.  Iceberg/hudi
+    # buffer their commits: every non-commit-point object of the whole
+    # drain (manifests, manifest-lists, instant markers) is staged and
+    # flushed in ONE pipelined write_many round when the transaction
+    # closes, and only the per-commit metadata puts stay serial — a crash
+    # still leaves a valid prefix because staged objects are unreferenced
+    # until their (ordered, atomic put-if-absent) commit point lands, and
+    # recovery stays "run it again".
     @contextmanager
     def transaction(self):
         self._in_txn = True
         try:
             yield self
-        finally:
-            if self._txn is not None:
-                self._txn.close()
-                self._txn = None
+        except BaseException:
+            txn, self._txn = self._txn, None
             self._in_txn = False
+            if txn is not None:
+                try:
+                    txn.close()     # best-effort: land what was buffered
+                except Exception:
+                    pass            # the body's error is the root cause —
+                    #                 a secondary flush failure must not
+                    #                 mask it (recovery is "run it again")
+            raise
+        else:
+            txn, self._txn = self._txn, None
+            self._in_txn = False
+            if txn is not None:
+                txn.close()         # flush any buffered commits
 
     def _commit(self, adds, removes, **kw) -> str:
         if self._in_txn:
             if self._txn is None:   # lazy: FULL sync may create the table
-                self._txn = self.handle.transaction(schema=self._schema)
+                self._txn = self._begin_txn()
             return self._txn.commit(adds, removes, **kw)
         return self.handle.commit(adds, removes, **kw)
+
+    def _begin_txn(self):
+        """Open the handle transaction, seeding it with whatever target
+        metadata this writer already read at plan time (format overrides
+        pass their cached state so begin costs zero re-reads)."""
+        return self.handle.transaction(schema=self._schema, **self._txn_opts)
 
     # -- sync-state bookkeeping (stored in target-native metadata) ---------
     def get_sync_token(self) -> str | None:
@@ -193,28 +222,58 @@ class IcebergTarget(_HandleTarget):
     handle_cls = IcebergTable
     format = "iceberg"
 
-    # iceberg keeps properties and schema in the metadata JSON; reading sync
-    # state must not materialize the file list from every manifest
+    # iceberg keeps properties and schema in the metadata JSON; ONE metadata
+    # read at plan time serves the sync token, the current schema AND the
+    # transaction begin — re-discovering the head for each (hint read +
+    # roll-forward + metadata parse) would pay ~3 extra RTT rounds per unit
+    def __init__(self, fs, base_path, **kw):
+        super().__init__(fs, base_path, **kw)
+        self._meta = None       # (version, metadata dict) from _load_state
+
     def _load_state(self) -> dict:
-        return self.handle.properties()
+        self._meta = self.handle.read_metadata()
+        meta = self._meta[1]
+        if self._schema is None:
+            self._schema = self.handle.schema_from_metadata(meta)
+        return dict(meta["properties"])
 
     def _current_schema(self):
         if self._schema is None:
-            self._schema = self.handle.current_schema()
+            if self._meta is not None:
+                self._schema = self.handle.schema_from_metadata(
+                    self._meta[1])
+            else:
+                self._schema = self.handle.current_schema()
         return self._schema
+
+    def _begin_txn(self):
+        # seed the transaction with the plan-time metadata read: begin then
+        # costs ZERO requests (a foreign commit in between surfaces as a
+        # conflict at flush and re-syncs — the same race window as before)
+        return self.handle.transaction(schema=self._schema, meta=self._meta,
+                                       **self._txn_opts)
 
 
 class HudiTarget(_HandleTarget):
     handle_cls = HudiTable
     format = "hudi"
 
+    def __init__(self, fs, base_path, **kw):
+        super().__init__(fs, base_path, **kw)
+        self._props_full = None     # full hoodie.properties from _load_state
+
     def _load_state(self) -> dict:
         # hudi keeps sync state in the latest commit's extraMetadata, whose
-        # values arrive already decoded by the shared extraMetadata codec
+        # values arrive already decoded by the shared extraMetadata codec;
+        # the ONE properties read here also seeds the transaction begin
         em = self.handle.latest_extra_metadata()
-        if self._schema is None and em.get("schema"):
-            self._schema = schema_from_avro(em["schema"])
-        out = dict(self.handle.properties())
+        self._props_full = self.handle.table_properties()
+        if self._schema is None:
+            s = em.get("schema") or \
+                self._props_full["hoodie.table.create.schema"]
+            self._schema = schema_from_avro(s)
+        out = {k: v for k, v in self._props_full.items()
+               if not k.startswith("hoodie.")}
         for k in (TOKEN_KEY, SOURCE_FMT_KEY, MODE_KEY):
             if k in em:
                 # sync-state values are strings by contract; a foreign/legacy
@@ -233,9 +292,18 @@ class HudiTarget(_HandleTarget):
             self._schema = schema_from_avro(s)
         return self._schema
 
+    def _begin_txn(self):
+        # seed the transaction with the plan-time properties read
+        return self.handle.transaction(schema=self._schema,
+                                       props=self._props_full)
+
 
 TARGETS = {"delta": DeltaTarget, "iceberg": IcebergTarget, "hudi": HudiTarget}
 
 
-def make_target(fmt: str, fs, base_path: str) -> ConversionTarget:
-    return TARGETS[fmt](fs, base_path)
+def make_target(fmt: str, fs, base_path: str, *,
+                manifest_compaction_threshold: int | None = None
+                ) -> ConversionTarget:
+    return TARGETS[fmt](
+        fs, base_path,
+        manifest_compaction_threshold=manifest_compaction_threshold)

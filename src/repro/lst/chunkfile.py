@@ -175,6 +175,32 @@ def write_chunk(fs, base_path: str, rel_path: str,
                         column_stats=stats, extra=dict(extra or {}))
 
 
+def write_chunks(fs, base_path: str,
+                 files: list[tuple[str, Mapping[str, np.ndarray], dict, dict]],
+                 *, compress: bool = False) -> list[DataFileMeta]:
+    """Batched ``write_chunk``: serialize every file, then flush all payloads
+    in ONE pipelined ``write_many`` round (put-if-absent — data files are
+    write-once), instead of one round trip per file.
+
+    ``files`` is ``[(rel_path, columns, partition_values, extra)]``.  Data
+    files are commit-*staged* objects: unreferenced until the metadata
+    commit that names them lands, so pipelining them cannot tear a table.
+    """
+    from repro.lst.storage.base import flush_many
+
+    metas, staged = [], []
+    for rel_path, columns, partition_values, extra in files:
+        payload, nrows, stats = serialize_chunk(columns, extra=extra,
+                                                compress=compress)
+        staged.append((f"{base_path}/{rel_path}", payload))
+        metas.append(DataFileMeta(
+            path=rel_path, size_bytes=len(payload), record_count=nrows,
+            partition_values=dict(partition_values or {}),
+            column_stats=stats, extra=dict(extra or {})))
+    flush_many(fs, staged)
+    return metas
+
+
 _TRAILER_LEN = 8 + len(MAGIC)   # footer offset + closing magic
 
 

@@ -176,8 +176,18 @@ class DeltaTable:
         table each cycle pays exactly one storage request per quiet table.
         An absent/empty log yields ``""`` (the "no table yet" token).
         """
+        return self.head_probe()[0]
+
+    def head_probe(self) -> tuple[str, int | None]:
+        """``(head_token, probe_state)`` in ONE storage request.
+
+        The probe state (the head version number) can be handed back to
+        ``replay(probe=...)`` within the same daemon cycle so the tail
+        refresh constructs the new log-segment names directly — delta
+        versions are dense integers — instead of re-listing the log.
+        """
         vs = self._list_versions()
-        return str(vs[-1]) if vs else ""
+        return (str(vs[-1]), vs[-1]) if vs else ("", None)
 
     def versions(self) -> list[str]:
         return [str(v) for v in self._list_versions()]
@@ -245,7 +255,8 @@ class DeltaTable:
         return adds, removes, op, info
 
     def replay(self, since: str | None = None,
-               seed: CommitEntry | None = None
+               seed: CommitEntry | None = None,
+               probe: int | None = None
                ) -> tuple[TableState | None, list[CommitEntry]]:
         """Single-pass scan of the log -> per-commit entries.
 
@@ -263,11 +274,37 @@ class DeltaTable:
         without it the metaData is recovered from the tail/checkpoint scan.
         Raises ``KeyError`` if ``since`` is no longer in the log (vacuumed) —
         callers fall back to a full replay.
+
+        ``probe`` — the head version from a same-cycle ``head_probe()`` —
+        lets a seeded tail replay skip the log listing entirely: delta
+        versions are dense integers, so the segment names for
+        ``since+1 .. probe`` are constructed directly (a vacuumed segment
+        surfaces as ``FileNotFoundError`` and callers rebuild).
         """
-        versions = self._list_versions()
         schema, pspec, props, ts = None, PartitionSpec(), {}, 0
         base = None
         start_after = -1
+        if since is not None and seed is not None and probe is not None:
+            # probe-assisted tail: zero head-discovery requests
+            sv = int(since)
+            if int(probe) < sv:
+                # the head moved BEHIND the anchor (restore / divergent
+                # rewrite): an empty constructed range would silently hide
+                # it — surface it like the unhinted membership check does
+                raise KeyError(f"head {probe} behind anchor {since} "
+                               f"(divergent rewrite)")
+            schema, pspec, props = (seed.schema, seed.partition_spec,
+                                    dict(seed.properties))
+            ts = seed.timestamp_ms
+            tail = list(range(sv + 1, int(probe) + 1))
+            actions_by_v = self._read_actions_many(tail)
+            entries = []
+            for v in tail:
+                schema, pspec, props, ts, e = self._entry_of(
+                    v, actions_by_v[v], schema, pspec, props, ts)
+                entries.append(e)
+            return None, entries
+        versions = self._list_versions()
         cp = self._last_checkpoint()
         if since is not None:
             sv = int(since)

@@ -13,15 +13,16 @@ from repro.lst.storage import (FileSystem, InstrumentedFS, LocalFS, MemoryFS,
                                SequentialBatchMixin, SimulatedObjectStore,
                                StorageProfile, StorageRetryExhausted,
                                TransientStorageError, fetch_many,
-                               fetch_many_ranges, join, make_fs, resolve_uri,
-                               scheme_of, split_uri)
+                               fetch_many_ranges, flush_many, join, make_fs,
+                               resolve_uri, scheme_of, split_uri)
 
 __all__ = [
     "FileSystem", "LocalFS", "MemoryFS", "SimulatedObjectStore",
     "StorageProfile", "RetryingFS", "RetryPolicy", "InstrumentedFS",
     "PutIfAbsentError", "TransientStorageError", "StorageRetryExhausted",
-    "SequentialBatchMixin", "fetch_many", "fetch_many_ranges", "join",
-    "make_fs", "resolve_uri", "scheme_of", "split_uri", "strip_scheme",
+    "SequentialBatchMixin", "fetch_many", "fetch_many_ranges", "flush_many",
+    "join", "make_fs", "resolve_uri", "scheme_of", "split_uri",
+    "strip_scheme",
 ]
 
 

@@ -23,7 +23,7 @@ import threading
 import time
 
 from repro.lst.chunkfile import ColumnStats, DataFileMeta
-from repro.lst.storage import PutIfAbsentError, fetch_many, join
+from repro.lst.storage import PutIfAbsentError, fetch_many, flush_many, join
 from repro.lst.schema import (CommitEntry, Field, PartitionSpec, Schema,
                               TableState)
 
@@ -237,11 +237,21 @@ class HudiTable:
         point lands.  An absent table yields ``""``; an empty-but-created
         timeline yields ``"0"`` (the pre-first-instant version).
         """
+        return self.head_probe()[0]
+
+    def head_probe(self) -> tuple[str, list | None]:
+        """``(head_token, probe_state)`` in ONE storage request.
+
+        The probe state is the parsed completed-instant timeline, which
+        ``replay(probe=...)`` can consume within the same daemon cycle so
+        the tail refresh never re-lists ``.hoodie/`` (instant timestamps
+        are not dense, so unlike delta the listing itself is the memo).
+        """
         names = self.fs.list_dir(join(self.base, HOODIE_DIR))
         if not names:
-            return ""
+            return "", None
         completed = self._completed_instants(names)
-        return completed[-1][0] if completed else "0"
+        return (completed[-1][0] if completed else "0"), completed
 
     def versions(self) -> list[str]:
         return [ts for ts, _ in self._timeline()]
@@ -287,7 +297,8 @@ class HudiTable:
         raise KeyError(f"instant {version} not found")
 
     def replay(self, since: str | None = None,
-               seed: CommitEntry | None = None
+               seed: CommitEntry | None = None,
+               probe: list | None = None
                ) -> tuple[TableState | None, list[CommitEntry]]:
         """Single-pass scan of the timeline -> per-instant entries.
 
@@ -299,6 +310,10 @@ class HudiTable:
         ``CommitEntry`` for ``since`` — supplies the as-of schema, so the
         tail costs O(new instants) reads.  Raises ``KeyError`` if ``since``
         is not a completed instant.
+
+        ``probe`` — the completed-instant timeline from a same-cycle
+        ``head_probe()`` — replaces the ``.hoodie/`` listing, so a hinted
+        refresh never re-discovers the head it was just told about.
         """
         props = self._read_props()
         schema = schema_from_avro(props["hoodie.table.create.schema"])
@@ -306,7 +321,7 @@ class HudiTable:
         spec = PartitionSpec([c for c in pf.split(",") if c])
         user_props = {k: v for k, v in props.items()
                       if not k.startswith("hoodie.")}
-        timeline = self._timeline()
+        timeline = list(probe) if probe is not None else self._timeline()
         base: TableState | None = TableState(FORMAT, "0", 0, schema, spec, {},
                                              user_props)
         ts_ms = 0
@@ -404,77 +419,128 @@ class HudiTable:
         raise CommitConflict("hudi commit retries exhausted")
 
     # ----------------------------------------------------------- transaction
-    def transaction(self, *, schema: Schema | None = None) -> "HudiTransaction":
+    def transaction(self, *, schema: Schema | None = None,
+                    props: dict | None = None) -> "HudiTransaction":
         """Multi-commit transaction: read the properties + latest instant
-        ONCE, keep the schema and table properties in memory, and write each
-        instant's three-phase files without any re-read of the timeline."""
-        return HudiTransaction(self, schema=schema)
+        ONCE, keep the schema and table properties in memory, and buffer
+        each instant — the requested/inflight markers of the whole chain
+        are staged and flushed in one pipelined ``write_many`` round at
+        ``flush()``/``close()``; only the completed-instant puts (the
+        atomic commit points) stay serial, and the properties file is
+        rewritten once per flush instead of once per commit.  ``props`` —
+        an already-read ``hoodie.properties`` map — makes begin cost zero
+        requests."""
+        return HudiTransaction(self, schema=schema, props=props)
 
 
 class HudiTransaction:
     """Buffered writer state for an N-instant sync unit (single writer).
 
     Begin cost: one properties read (+ one latest-instant read when the
-    schema is not seeded by the caller).  Per commit: zero reads — the
-    timeline replay hiding inside ``commit()``'s ``snapshot()`` is replaced
-    by the tracked in-memory schema/properties.
+    schema is not seeded by the caller).  ``commit()`` only buffers: the
+    instant timestamp is allocated eagerly (monotonic), the payload is
+    materialized in memory, and nothing touches storage until ``flush()``,
+    which (1) stages every pending instant's requested + inflight markers
+    in one pipelined ``write_many`` round, (2) puts the completed instants
+    serially — each a put-if-absent, the atomic commit point — and
+    (3) rewrites ``hoodie.properties`` once if any commit changed it.
+
+    A crash anywhere leaves a valid prefix: markers are invisible to
+    readers (only *completed* instants are commits), and completed instants
+    land oldest-first.  A completed-instant collision (foreign writer owns
+    the timestamp) re-allocates that instant AND every later pending one,
+    keeping timeline order, then re-flushes the affected markers.
     """
 
-    def __init__(self, table: HudiTable, *, schema: Schema | None = None):
+    def __init__(self, table: HudiTable, *, schema: Schema | None = None,
+                 props: dict | None = None):
         self.t = table
-        self._props = table._read_props()
+        self._props = dict(props) if props is not None else table._read_props()
+        self._props_dirty = False
         if schema is not None:
             self._schema = schema
         else:
             em = table.latest_extra_metadata()
             self._schema = schema_from_avro(
                 em.get("schema") or self._props["hoodie.table.create.schema"])
+        self._pending: list[dict] = []   # materialized, not yet flushed
+        self._max_retries = 5
 
     def commit(self, adds: list[DataFileMeta] = (), removes: list[str] = (), *,
                schema: Schema | None = None, properties: dict | None = None,
                operation: str = "upsert", extra_meta: dict | None = None,
                max_retries: int = 5) -> str:
+        """Buffer one instant; it lands at the next ``flush()``/``close()``.
+        Returns the allocated instant timestamp (re-allocated only if a
+        foreign writer collides on it at flush time)."""
+        self._max_retries = max(self._max_retries, max_retries)
         action = "replacecommit" if removes else "commit"
         cur_schema = schema if schema is not None else self._schema
-        for _ in range(max_retries):
-            instant = new_instant()
-            hdir = join(self.t.base, HOODIE_DIR)
-            try:
-                self.t.fs.write_bytes(
-                    join(hdir, f"{instant}.{action}.requested"), b"{}")
-            except PutIfAbsentError:
-                continue
-            self.t.fs.write_bytes(join(hdir, f"{instant}.{action}.inflight"),
-                                  b"{}", overwrite=True)
-            p2ws: dict[str, list] = {}
-            for f in adds:
-                part = "/".join(f"{k}={v}" for k, v in
-                                f.partition_values.items())
-                p2ws.setdefault(part, []).append(_stat_entry(f))
-            p2rf: dict[str, list] = {}
-            for p in removes:
-                p2rf.setdefault(p.rsplit("/", 1)[0] if "/" in p else "", []) \
-                    .append(p)
-            extra = {"schema": schema_to_avro(cur_schema)}
-            if extra_meta:
-                extra.update(extra_meta)
-            payload = {"partitionToWriteStats": p2ws,
-                       "operationType": operation.upper(),
-                       "timestampMs": time.time_ns() // 1_000_000,
-                       "extraMetadata": encode_extra_metadata(extra)}
-            if removes:
-                payload["partitionToReplacedFilePaths"] = p2rf
-            try:
-                self.t.fs.write_bytes(join(hdir, f"{instant}.{action}"),
-                                      json.dumps(payload).encode())
-            except PutIfAbsentError:
-                continue
-            self._schema = cur_schema
-            if properties:
-                self._props.update({k: str(v) for k, v in properties.items()})
-                self.t._write_props(self._props)
-            return instant
-        raise CommitConflict("hudi transactional commit retries exhausted")
+        p2ws: dict[str, list] = {}
+        for f in adds:
+            part = "/".join(f"{k}={v}" for k, v in f.partition_values.items())
+            p2ws.setdefault(part, []).append(_stat_entry(f))
+        p2rf: dict[str, list] = {}
+        for p in removes:
+            p2rf.setdefault(p.rsplit("/", 1)[0] if "/" in p else "", []) \
+                .append(p)
+        extra = {"schema": schema_to_avro(cur_schema)}
+        if extra_meta:
+            extra.update(extra_meta)
+        payload = {"partitionToWriteStats": p2ws,
+                   "operationType": operation.upper(),
+                   "timestampMs": time.time_ns() // 1_000_000,
+                   "extraMetadata": encode_extra_metadata(extra)}
+        if removes:
+            payload["partitionToReplacedFilePaths"] = p2rf
+        self._schema = cur_schema
+        if properties:
+            self._props.update({k: str(v) for k, v in properties.items()})
+            self._props_dirty = True
+        instant = new_instant()
+        self._pending.append({"instant": instant, "action": action,
+                              "payload": json.dumps(payload).encode()})
+        return instant
+
+    # ---------------------------------------------------------------- flush
+    def flush(self) -> None:
+        """Land every buffered instant (see class docstring for the order)."""
+        hdir = join(self.t.base, HOODIE_DIR)
+        for _ in range(self._max_retries):
+            if not self._pending:
+                break
+            # one pipelined round for ALL pending markers (idempotent:
+            # marker content is constant, so restaging after a collision
+            # re-allocation is safe with overwrite)
+            staged = []
+            for p in self._pending:
+                stem = join(hdir, f"{p['instant']}.{p['action']}")
+                staged.append((f"{stem}.requested", b"{}"))
+                staged.append((f"{stem}.inflight", b"{}"))
+            flush_many(self.t.fs, staged, overwrite=True)
+            collided = False
+            while self._pending:
+                p = self._pending[0]
+                try:
+                    self.t.fs.write_bytes(
+                        join(hdir, f"{p['instant']}.{p['action']}"),
+                        p["payload"])
+                except PutIfAbsentError:
+                    # a foreign writer owns this timestamp: re-allocate it
+                    # and every later pending instant (monotonic allocation
+                    # keeps timeline order), then restage their markers
+                    for q in self._pending:
+                        q["instant"] = new_instant()
+                    collided = True
+                    break
+                self._pending.pop(0)
+            if not collided:
+                break
+        else:
+            raise CommitConflict("hudi transactional commit retries exhausted")
+        if self._props_dirty:
+            self.t._write_props(self._props)
+            self._props_dirty = False
 
     def close(self) -> None:
-        pass
+        self.flush()

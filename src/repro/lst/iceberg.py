@@ -22,7 +22,7 @@ import time
 import uuid
 
 from repro.lst.chunkfile import ColumnStats, DataFileMeta
-from repro.lst.storage import PutIfAbsentError, fetch_many, join
+from repro.lst.storage import PutIfAbsentError, fetch_many, flush_many, join
 from repro.lst.schema import (CommitEntry, Field, PartitionField,
                               PartitionSpec, Schema, TableState)
 
@@ -143,18 +143,21 @@ class IcebergTable:
         return join(self.base, META_DIR, "version-hint.text")
 
     def _current_meta_version(self) -> int:
-        if self.fs.exists(self._hint_path()):
+        try:
+            # read the hint directly (no exists() pre-flight — one fewer
+            # round trip; a missing hint is the rare foreign-table case)
             n = int(self.fs.read_bytes(self._hint_path()).decode().strip())
-            # the hint may lag a concurrent commit; roll forward
-            while self.fs.exists(self._meta_path(n + 1)):
-                n += 1
-            return n
-        versions = [int(x[1:-len(".metadata.json")])
-                    for x in self.fs.list_dir(join(self.base, META_DIR))
-                    if x.startswith("v") and x.endswith(".metadata.json")]
-        if not versions:
-            raise FileNotFoundError("no iceberg metadata")
-        return max(versions)
+        except FileNotFoundError:
+            versions = [int(x[1:-len(".metadata.json")])
+                        for x in self.fs.list_dir(join(self.base, META_DIR))
+                        if x.startswith("v") and x.endswith(".metadata.json")]
+            if not versions:
+                raise FileNotFoundError("no iceberg metadata") from None
+            return max(versions)
+        # the hint may lag a concurrent commit; roll forward
+        while self.fs.exists(self._meta_path(n + 1)):
+            n += 1
+        return n
 
     def _read_metadata(self, n: int | None = None) -> tuple[int, dict]:
         n = n if n is not None else self._current_meta_version()
@@ -183,6 +186,16 @@ class IcebergTable:
                             json.dumps({"entries": entries}).encode())
         return rel
 
+    def _stage_manifest(self, name: str, entries: list[dict],
+                        staged: list[tuple[str, bytes]]) -> str:
+        """Append a manifest to a staged-write batch instead of putting it
+        immediately; the caller flushes the batch in one pipelined round
+        before the commit-point metadata put."""
+        rel = join(META_DIR, name)
+        staged.append((join(self.base, rel),
+                       json.dumps({"entries": entries}).encode()))
+        return rel
+
     def _read_manifest_list(self, path: str) -> list[dict]:
         return json.loads(self.fs.read_bytes(join(self.base, path)))["manifests"]
 
@@ -198,24 +211,41 @@ class IcebergTable:
     def head_token(self) -> str:
         """O(1) change-detection probe: an opaque token that moves iff the
         table advanced.  One GET of ``version-hint.text`` — every commit
-        rewrites the hint right after its metadata put, so the hint number
-        moves with the head and no ``v{N}.metadata.json`` is parsed.  Falls
-        back to listing the metadata dir when the hint is missing (foreign
-        writer); an absent table yields ``""``.
+        (every transaction *flush*, including one that aborts after landing
+        a prefix) rewrites the hint right after its last metadata put, so
+        the hint number moves with the head and no ``v{N}.metadata.json``
+        is parsed.  A writer crashing inside the hint window leaves the
+        token lagging until the next successful commit — readers roll the
+        hint forward, only change *detection* waits.  Falls back to listing
+        the metadata dir when the hint is missing (foreign writer); an
+        absent table yields ``""``.
 
         The token is the *metadata file* version, not the snapshot id: two
         different tokens can name the same snapshot (e.g. a properties-only
         commit), which at worst causes one spurious replan — never a missed
         change.
         """
+        return self.head_probe()[0]
+
+    def head_probe(self) -> tuple[str, int | None]:
+        """``(head_token, probe_state)`` in ONE storage request (plus the
+        listing fallback for hint-less foreign tables).
+
+        The probe state is the metadata-file version the token names, which
+        ``replay(probe=...)`` / ``_read_metadata(n)`` can consume within the
+        same daemon cycle to open ``v{N}.metadata.json`` directly instead of
+        re-running the hint-read + roll-forward discovery dance.
+        """
         try:
-            n = self.fs.read_bytes(self._hint_path()).decode().strip()
-            return f"hint:{n}"
+            n = int(self.fs.read_bytes(self._hint_path()).decode().strip())
+            return f"hint:{n}", n
         except FileNotFoundError:
             versions = [int(x[1:-len(".metadata.json")])
                         for x in self.fs.list_dir(join(self.base, META_DIR))
                         if x.startswith("v") and x.endswith(".metadata.json")]
-            return f"list:{max(versions)}" if versions else ""
+            if not versions:
+                return "", None
+            return f"list:{max(versions)}", max(versions)
 
     def versions(self) -> list[str]:
         _, meta = self._read_metadata()
@@ -279,7 +309,8 @@ class IcebergTable:
             dict(snap["summary"])
 
     def replay(self, since: str | None = None,
-               seed: CommitEntry | None = None
+               seed: CommitEntry | None = None,
+               probe: int | None = None
                ) -> tuple[TableState | None, list[CommitEntry]]:
         """Single-pass scan of the snapshot chain -> per-commit entries.
 
@@ -293,8 +324,12 @@ class IcebergTable:
         exclusively in manifests it added itself (``added-snapshot-id``), so
         the tail never touches carried-forward manifests from older
         snapshots.  Raises ``KeyError`` if ``since`` is not in the chain.
+
+        ``probe`` — the metadata-file version from a same-cycle
+        ``head_probe()`` — opens ``v{N}.metadata.json`` directly, skipping
+        the hint-read + roll-forward head discovery.
         """
-        _, meta = self._read_metadata()
+        _, meta = self._read_metadata(probe)
         cur_schema = self._schema_of(meta, meta["current-schema-id"])
         spec = spec_from_ice(meta["partition-specs"][meta["default-spec-id"]],
                              cur_schema)
@@ -363,6 +398,17 @@ class IcebergTable:
         _, meta = self._read_metadata()
         return self._schema_of(meta, meta["current-schema-id"])
 
+    def read_metadata(self) -> tuple[int, dict]:
+        """One read of the current ``(metadata version, metadata dict)`` —
+        the public accessor for callers that answer several questions
+        (properties, schema, transaction seed) from a single fetch; hand
+        the tuple to ``transaction(meta=...)`` to make begin free."""
+        return self._read_metadata()
+
+    def schema_from_metadata(self, meta: dict) -> Schema:
+        """The current schema carried by an already-read metadata dict."""
+        return self._schema_of(meta, meta["current-schema-id"])
+
     # --------------------------------------------------------------- commits
     def commit(self, adds: list[DataFileMeta] = (), removes: list[str] = (), *,
                schema: Schema | None = None, properties: dict | None = None,
@@ -384,7 +430,10 @@ class IcebergTable:
         ts = _now_ms()
         removes = set(removes)
 
-        # -- carry forward manifests, rewriting only those touching removes
+        # -- carry forward manifests, rewriting only those touching removes;
+        #    new manifests + the manifest list are STAGED and flushed in one
+        #    pipelined round — only the metadata put below is ordered
+        staged: list[tuple[str, bytes]] = []
         manifests: list[dict] = []
         if meta["current-snapshot-id"] != -1:
             parent = self._snapshot_rec(meta, meta["current-snapshot-id"])
@@ -404,8 +453,9 @@ class IcebergTable:
                                                 "snapshot-id": sid})
                         else:
                             new_entries.append({**e, "status": EXISTING})
-                    rel = self._write_manifest(
-                        f"manifest-{sid}-rw{len(manifests)}.json", new_entries)
+                    rel = self._stage_manifest(
+                        f"manifest-{sid}-rw{len(manifests)}.json", new_entries,
+                        staged)
                     manifests.append(_mf_entry(rel, sid, new_entries))
                 elif entries:
                     manifests.append({**m, "added-files-count": 0,
@@ -415,12 +465,14 @@ class IcebergTable:
                                       "deleted-files-count": 0})
         if adds:
             entries = [_file_to_entry(f, ADDED, sid) for f in adds]
-            rel = self._write_manifest(f"manifest-{sid}-add.json", entries)
+            rel = self._stage_manifest(f"manifest-{sid}-add.json", entries,
+                                       staged)
             manifests.append(_mf_entry(rel, sid, entries))
 
         ml_rel = join(META_DIR, f"snap-{sid}.manifest-list.json")
-        self.fs.write_bytes(join(self.base, ml_rel),
-                            json.dumps({"manifests": manifests}).encode())
+        staged.append((join(self.base, ml_rel),
+                       json.dumps({"manifests": manifests}).encode()))
+        flush_many(self.fs, staged)
 
         summary = {"operation": operation,
                    "added-data-files": str(len(adds)),
@@ -456,34 +508,75 @@ class IcebergTable:
         return str(sid)
 
     # ----------------------------------------------------------- transaction
-    def transaction(self, *, schema: Schema | None = None
+    def transaction(self, *, schema: Schema | None = None,
+                    manifest_compaction_threshold: int | None = None,
+                    meta: tuple[int, dict] | None = None
                     ) -> "IcebergTransaction":
         """Multi-commit transaction: parse ``v{N}.metadata.json`` ONCE and
         thread the metadata dict + manifest-list through every commit in
-        memory — per commit only the NEW manifests, the manifest list and
-        the next metadata file are written, and nothing is re-read."""
-        return IcebergTransaction(self)
+        memory.  Commits are *buffered*: every non-commit-point object (new
+        manifests, manifest-lists) across the whole chain is staged and
+        flushed in one pipelined ``write_many`` round at ``flush()``/
+        ``close()``; only the per-commit metadata puts stay serial, so an
+        N-commit drain costs ~N+O(1) serial round trips instead of ~4N.
+        ``manifest_compaction_threshold`` folds the manifest list into one
+        manifest whenever a commit would leave more than that many; ``meta``
+        — an already-read ``(version, metadata dict)`` — makes begin cost
+        zero requests (a stale caller races like any concurrent writer:
+        the conflict surfaces at flush and the chain re-materializes)."""
+        return IcebergTransaction(
+            self, manifest_compaction_threshold=manifest_compaction_threshold,
+            meta=meta)
 
 
 class IcebergTransaction:
     """Buffered writer state for an N-commit sync unit (single writer).
 
     Begin cost: one metadata-JSON read; the parent manifest-list is read
-    lazily on the first commit.  Append commits: zero reads, three writes.
-    A commit with removes must locate the removed entries, which opens the
-    live parent manifests — but at most ONCE EACH per transaction (memoized,
-    and rewritten/added manifests enter the memo at write time), instead of
-    once per commit as on the non-transactional path.
+    lazily at the first flush.  ``commit()`` only *buffers*: the snapshot id
+    is predicted from the in-memory sequence counter (the transaction is the
+    single writer; a foreign commit surfaces as a conflict at flush and the
+    chain is re-materialized with fresh ids).  ``flush()`` then
+
+    1. materializes every pending commit in memory,
+    2. flushes ALL staged non-commit objects — new manifests and
+       manifest-lists, uniquely named per snapshot id, hence idempotent —
+       in one pipelined ``write_many`` round,
+    3. issues the per-commit ``v{N}.metadata.json`` puts serially (the
+       ordered atomic commit points), and
+    4. moves ``version-hint.text`` once.
+
+    A crash anywhere leaves a valid prefix: staged objects are unreferenced
+    until their commit point lands, and every landed commit references only
+    already-flushed objects.  A commit with removes must locate the removed
+    entries, which opens the live parent manifests — at most ONCE EACH per
+    transaction (memoized; staged manifests enter the memo at materialize
+    time).  With a ``manifest_compaction_threshold``, a commit that would
+    carry more than that many manifests folds them all into one, bounding
+    the O(manifests) read amplification of long incremental chains.
     """
 
-    def __init__(self, table: IcebergTable):
+    def __init__(self, table: IcebergTable, *,
+                 manifest_compaction_threshold: int | None = None,
+                 meta: tuple[int, dict] | None = None):
         self.t = table
-        self.n, self.meta = table._read_metadata()
+        self.n, self.meta = meta if meta is not None \
+            else table._read_metadata()
+        if manifest_compaction_threshold is not None \
+                and manifest_compaction_threshold < 1:
+            raise ValueError("manifest_compaction_threshold must be >= 1")
+        self.compaction_threshold = manifest_compaction_threshold
+        self.compactions = 0                         # folds performed
         self._manifests: list[dict] | None = None    # current manifest list
         self._manifest_memo: dict[str, list[dict]] = {}
+        self._pending: list[tuple] = []              # buffered commit args
+        self._max_retries = 5
 
     @property
     def version(self) -> str:
+        """Head snapshot id including buffered (not yet flushed) commits."""
+        if self._pending:
+            return str(self.meta["last-sequence-number"] + len(self._pending))
         return str(self.meta["current-snapshot-id"])
 
     def _read_manifest(self, path: str) -> list[dict]:
@@ -506,24 +599,104 @@ class IcebergTransaction:
                schema: Schema | None = None, properties: dict | None = None,
                operation: str = "append", extra_meta: dict | None = None,
                max_retries: int = 5) -> str:
-        for _ in range(max_retries):
-            try:
-                return self._commit_once(adds, removes, schema, properties,
-                                         operation, extra_meta)
-            except (CommitConflict, PutIfAbsentError):
-                # a concurrent writer advanced the table (detected either at
-                # the metadata put or earlier, at a manifest/manifest-list
-                # name collision — the in-memory sid is stale for the whole
-                # transaction, not just a read-modify-write window):
-                # re-read and retry with a fresh sequence number
-                self.n, self.meta = self.t._read_metadata()
-                self._manifests = None
-                continue
-        raise CommitConflict("iceberg transactional commit retries exhausted")
+        """Buffer one commit; it lands at the next ``flush()``/``close()``.
+        Returns the predicted snapshot id (exact unless a foreign writer
+        races the flush, which re-materializes the chain)."""
+        self._max_retries = max(self._max_retries, max_retries)
+        self._pending.append((list(adds), list(removes), schema, properties,
+                              operation, extra_meta))
+        return str(self.meta["last-sequence-number"] + len(self._pending))
 
-    def _commit_once(self, adds, removes, schema, properties, operation,
-                     extra_meta) -> str:
-        meta = self.meta
+    # ---------------------------------------------------------------- flush
+    def flush(self) -> None:
+        """Land every buffered commit (see class docstring for the order)."""
+        if not self._pending:
+            return
+        landed = False
+        try:
+            for _ in range(self._max_retries):
+                staged, commits = self._materialize()
+                applied = 0
+                try:
+                    flush_many(self.t.fs, staged)
+                    for path, payload, n1, new_meta, new_manifests in commits:
+                        self.t.fs.write_bytes(path, payload)
+                        applied += 1
+                        landed = True
+                        self.n, self.meta = n1, new_meta
+                        self._manifests = new_manifests
+                except PutIfAbsentError:
+                    # a concurrent writer advanced the table (a stale
+                    # snapshot id collides at a staged name or at the
+                    # metadata put): keep the prefix that landed, re-read,
+                    # and re-materialize the remaining commits with fresh
+                    # sequence numbers
+                    del self._pending[:applied]
+                    self.n, self.meta = self.t._read_metadata()
+                    self._manifests = None
+                    continue
+                del self._pending[:applied]
+                break
+            else:
+                raise CommitConflict(
+                    "iceberg transactional commit retries exhausted")
+        except BaseException:
+            if landed:
+                # commits DID land before the failure: still move the
+                # advisory hint over them so ``head_token`` keeps tracking
+                # the head (a change-detection probe must not miss the
+                # landed prefix); a secondary hint failure must not mask
+                # the original error
+                try:
+                    self.t.fs.write_bytes(self.t._hint_path(),
+                                          str(self.n).encode(),
+                                          overwrite=True)
+                except Exception:
+                    pass
+            raise
+        # move the hint ONCE per flush, after the last commit point — it is
+        # advisory (readers roll forward), so deferring it drops N-1 serial
+        # round trips from an N-commit drain
+        self.t.fs.write_bytes(self.t._hint_path(), str(self.n).encode(),
+                              overwrite=True)
+
+    def _materialize(self) -> tuple[list, list]:
+        """Pending commits -> (staged objects, ordered commit-point puts).
+
+        Pure in-memory except for reads: the parent manifest list (lazy,
+        once) and — only for commits with removes or a compaction fold —
+        the not-yet-memoized live manifests, fetched in one batched round.
+        """
+        staged: list[tuple[str, bytes]] = []
+        commits: list[tuple] = []
+        meta, n = self.meta, self.n
+        manifests = list(self._parent_manifests())
+        # staged names carry a writer-unique token (the way real Iceberg
+        # embeds a UUID in manifest names): a crashed writer's orphans and
+        # a racing writer's staged objects can never collide with ours, so
+        # staged puts are conflict-free and only the metadata put races
+        self._tok = uuid.uuid4().hex[:8]
+        for adds, removes, schema, properties, operation, extra_meta \
+                in self._pending:
+            meta, manifests = self._materialize_one(
+                meta, manifests, adds, removes, schema, properties,
+                operation, extra_meta, staged)
+            n += 1
+            commits.append((self.t._meta_path(n), json.dumps(meta).encode(),
+                            n, meta, manifests))
+        return staged, commits
+
+    def _ensure_memo(self, manifests: list[dict]) -> None:
+        """Batch-open every live, not-yet-memoized manifest of ``manifests``."""
+        missing = [m["manifest-path"] for m in manifests
+                   if (m.get("added-files-count", 0) +
+                       m.get("existing-files-count", 0))
+                   and m["manifest-path"] not in self._manifest_memo]
+        self._manifest_memo.update(self.t._read_manifests_many(missing))
+
+    def _materialize_one(self, meta, parent_manifests, adds, removes, schema,
+                         properties, operation, extra_meta,
+                         staged) -> tuple[dict, list[dict]]:
         seq = meta["last-sequence-number"] + 1
         sid = seq
         ts = _now_ms()
@@ -531,14 +704,10 @@ class IcebergTransaction:
 
         # -- carry forward the in-memory manifest list; only manifests that
         #    contain a removed path are opened (memoized) and rewritten
-        if removes:   # open the not-yet-memoized live manifests in one batch
-            missing = [m["manifest-path"] for m in self._parent_manifests()
-                       if (m.get("added-files-count", 0) +
-                           m.get("existing-files-count", 0))
-                       and m["manifest-path"] not in self._manifest_memo]
-            self._manifest_memo.update(self.t._read_manifests_many(missing))
+        if removes:
+            self._ensure_memo(parent_manifests)
         manifests: list[dict] = []
-        for m in self._parent_manifests():
+        for m in parent_manifests:
             live = (m.get("added-files-count", 0) +
                     m.get("existing-files-count", 0))
             if not live:
@@ -555,9 +724,9 @@ class IcebergTransaction:
                                                 "snapshot-id": sid})
                         else:
                             new_entries.append({**e, "status": EXISTING})
-                    rel = self.t._write_manifest(
-                        f"manifest-{sid}-rw{len(manifests)}.json", new_entries)
-                    self._manifest_memo[rel] = new_entries
+                    rel = self._stage(
+                        f"manifest-{sid}-rw{len(manifests)}.{self._tok}.json",
+                        new_entries, staged)
                     manifests.append(_mf_entry(rel, sid, new_entries))
                     continue
             manifests.append({**m, "added-files-count": 0,
@@ -565,13 +734,19 @@ class IcebergTransaction:
                               "deleted-files-count": 0})
         if adds:
             entries = [_file_to_entry(f, ADDED, sid) for f in adds]
-            rel = self.t._write_manifest(f"manifest-{sid}-add.json", entries)
-            self._manifest_memo[rel] = entries
+            rel = self._stage(f"manifest-{sid}-add.{self._tok}.json",
+                              entries, staged)
             manifests.append(_mf_entry(rel, sid, entries))
 
-        ml_rel = join(META_DIR, f"snap-{sid}.manifest-list.json")
-        self.t.fs.write_bytes(join(self.t.base, ml_rel),
-                              json.dumps({"manifests": manifests}).encode())
+        if self.compaction_threshold is not None \
+                and len(manifests) > self.compaction_threshold:
+            manifests = [self._compact(manifests, sid, staged)]
+            self.compactions += 1
+
+        ml_rel = join(META_DIR,
+                      f"snap-{sid}.{self._tok}.manifest-list.json")
+        staged.append((join(self.t.base, ml_rel),
+                       json.dumps({"manifests": manifests}).encode()))
 
         summary = {"operation": operation,
                    "added-data-files": str(len(adds)),
@@ -604,14 +779,43 @@ class IcebergTransaction:
             "snapshot-log": meta["snapshot-log"] + [
                 {"timestamp-ms": ts, "snapshot-id": sid}],
         })
-        self.t._write_metadata(self.n + 1, new_meta)
-        self.n += 1
-        self.meta = new_meta
-        self._manifests = manifests
-        return str(sid)
+        return new_meta, manifests
+
+    def _stage(self, name: str, entries: list[dict], staged: list) -> str:
+        rel = self.t._stage_manifest(name, entries, staged)
+        self._manifest_memo[rel] = entries
+        return rel
+
+    def _compact(self, manifests: list[dict], sid: int,
+                 staged: list) -> dict:
+        """Fold the whole manifest list into ONE staged manifest.
+
+        Long incremental chains grow one small manifest per commit; folding
+        at the threshold bounds snapshot-read amplification.  Entries of the
+        current snapshot keep their ADDED/DELETED status (so ``changes()``
+        and tail replays still see this commit's delta); older entries
+        become EXISTING with their original snapshot-id, and historical
+        tombstones are dropped (older snapshots read their own, untouched
+        manifest lists).
+        """
+        self._ensure_memo(manifests)
+        folded: list[dict] = []
+        for m in manifests:
+            if not (m.get("added-files-count", 0) +
+                    m.get("existing-files-count", 0) +
+                    m.get("deleted-files-count", 0)):
+                continue
+            for e in self._read_manifest(m["manifest-path"]):
+                if e["snapshot-id"] == sid:
+                    folded.append(e)             # this commit's own delta
+                elif e["status"] != DELETED:
+                    folded.append({**e, "status": EXISTING})
+        rel = self._stage(f"manifest-{sid}-compact.{self._tok}.json",
+                          folded, staged)
+        return _mf_entry(rel, sid, folded)
 
     def close(self) -> None:
-        pass
+        self.flush()
 
 
 def _mf_entry(rel: str, sid: int, entries: list[dict]) -> dict:

@@ -53,6 +53,8 @@ class FileSystem(Protocol):
     def read_many_ranges(
         self, requests: Sequence[tuple[str, int, int]]) -> list[bytes]: ...
     def write_bytes(self, path: str, data: bytes, *, overwrite: bool = False) -> None: ...
+    def write_many(self, items: Sequence[tuple[str, bytes]], *,
+                   overwrite: bool = False) -> None: ...
     def exists(self, path: str) -> bool: ...
     def list_dir(self, path: str) -> list[str]: ...
     def size(self, path: str) -> int: ...
@@ -60,11 +62,11 @@ class FileSystem(Protocol):
 
 
 class SequentialBatchMixin:
-    """Default (unpipelined) batch reads: one request per object, in order.
+    """Default (unpipelined) batch reads/writes: one request per object.
 
     Concrete stores whose requests are local memory/disk operations inherit
     this; the :class:`~repro.lst.storage.simulated.SimulatedObjectStore`
-    overrides both methods with a concurrent fan-out so a batch costs
+    overrides these methods with a concurrent fan-out so a batch costs
     ~ceil(N / pipeline_depth) round trips instead of N.
     """
 
@@ -74,6 +76,11 @@ class SequentialBatchMixin:
     def read_many_ranges(
             self, requests: Sequence[tuple[str, int, int]]) -> list[bytes]:
         return [self.read_bytes_range(p, off, ln) for p, off, ln in requests]
+
+    def write_many(self, items: Sequence[tuple[str, bytes]], *,
+                   overwrite: bool = False) -> None:
+        for p, data in items:
+            self.write_bytes(p, data, overwrite=overwrite)
 
 
 def fetch_many(fs, paths: Sequence[str]) -> list[bytes]:
@@ -102,6 +109,28 @@ def fetch_many_ranges(fs, requests: Sequence[tuple[str, int, int]]) -> list[byte
     if rmr is not None:
         return rmr(requests)
     return [fs.read_bytes_range(p, off, ln) for p, off, ln in requests]
+
+
+def flush_many(fs, items: Sequence[tuple[str, bytes]], *,
+               overwrite: bool = False) -> None:
+    """``fs.write_many`` with a sequential fallback (the write-side twin of
+    :func:`fetch_many`).
+
+    Target transactions funnel every *staged* (non-commit-point) object —
+    iceberg manifests and manifest-lists, hudi requested/inflight markers,
+    chunk data files — through this helper, so a pipelining-capable store
+    overlaps the puts while any duck-typed FileSystem keeps working.  Staged
+    objects must be idempotent (uniquely named, content-deterministic):
+    only the commit-point put is ordered, and it never goes through here.
+    """
+    items = list(items)
+    if not items:
+        return
+    wm = getattr(fs, "write_many", None)
+    if wm is not None:
+        return wm(items, overwrite=overwrite)
+    for p, data in items:
+        fs.write_bytes(p, data, overwrite=overwrite)
 
 
 def join(*parts: str) -> str:

@@ -19,6 +19,8 @@ import threading
 from contextlib import contextmanager
 from typing import Sequence
 
+from repro.lst.storage.base import flush_many
+
 COUNT_KEYS = ("get", "put", "list", "head", "delete",
               "bytes_read", "bytes_written")
 
@@ -137,6 +139,13 @@ class InstrumentedFS:
         self._bump("put")
         self._bump("bytes_written", len(data))
         self.inner.write_bytes(path, data, overwrite=overwrite)
+
+    def write_many(self, items: Sequence[tuple[str, bytes]], *,
+                   overwrite: bool = False) -> None:
+        items = list(items)
+        self._bump("put", len(items))
+        self._bump("bytes_written", sum(len(d) for _, d in items))
+        flush_many(self.inner, items, overwrite=overwrite)
 
     def delete(self, path: str) -> None:
         self._bump("delete")

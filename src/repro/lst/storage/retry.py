@@ -170,6 +170,64 @@ class RetryingFS:
             f"PUT {path} failed after {self.policy.max_attempts} attempts"
         ) from last
 
+    def write_many(self, items: Sequence[tuple[str, bytes]], *,
+                   overwrite: bool = False) -> None:
+        """Batch puts with per-item retries.
+
+        When the backend exposes ``write_many_settled`` (per-item
+        outcomes), each round re-puts ONLY the failed items of the batch;
+        an item that comes back :class:`PutIfAbsentError` after one of its
+        own attempts failed transiently runs the same read-back
+        disambiguation as ``write_bytes`` — *per item*, so one ambiguous
+        put in a 32-object staged flush resolves without disturbing the
+        other 31.  A genuine lost race still raises so the commit protocol
+        sees the conflict.  Without a settled variant the items are written
+        through the (individually retried) single-put path.
+        """
+        items = list(items)
+        if not items:
+            return
+        settled_fn = getattr(self.inner, "write_many_settled", None)
+        if settled_fn is None:
+            for p, data in items:
+                self.write_bytes(p, data, overwrite=overwrite)
+            return
+        saw_transient: set[int] = set()
+        pending = list(range(len(items)))
+        for attempt in range(self.policy.max_attempts):
+            outcomes = settled_fn([items[i] for i in pending],
+                                  overwrite=overwrite)
+            still = []
+            for i, r in zip(pending, outcomes):
+                if r is None:
+                    continue
+                if isinstance(r, TransientStorageError):
+                    saw_transient.add(i)
+                    still.append(i)
+                elif isinstance(r, PutIfAbsentError):
+                    if i in saw_transient and not overwrite and \
+                            self._we_already_won(*items[i]):
+                        continue    # our earlier (ambiguous) attempt landed
+                    raise r         # a concurrent writer genuinely won
+                else:
+                    raise r
+            if not still:
+                return
+            self._note_retries(len(still))
+            pending = still
+            if attempt + 1 < self.policy.max_attempts:
+                self._sleep(self.policy.delay(attempt))
+        # final attempts may themselves have applied before their responses
+        # were lost — same per-item disambiguation before giving up
+        if not overwrite:
+            pending = [i for i in pending
+                       if not (i in saw_transient and
+                               self._we_already_won(*items[i]))]
+        if pending:
+            raise StorageRetryExhausted(
+                f"PUT-batch: {len(pending)} of {len(items)} items failed "
+                f"after {self.policy.max_attempts} attempts")
+
     def _we_already_won(self, path: str, data: bytes) -> bool:
         try:
             return self._with_retries(

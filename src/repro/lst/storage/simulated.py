@@ -8,15 +8,19 @@ Decorator that makes a backing store behave like a remote object store:
   the operation applies (``fault_rate``, a rejected/throttled request) or,
   for writes, *after* it applied (``ambiguous_put_rate``, the response was
   lost on the wire) — the case a retry-safe put-if-absent must disambiguate;
-* batch reads (``read_many`` / ``read_many_ranges``) are pipelined over
-  ``pipeline_depth`` concurrent in-flight requests, so N independent
-  metadata fetches cost ~ceil(N / depth) RTTs instead of N.
-  ``pipeline_depth=1`` degrades to one round trip per object — the
-  comparison arm of ``bench_object_store_sync``.
+* batch reads (``read_many`` / ``read_many_ranges``) and batch writes
+  (``write_many``) are pipelined over ``pipeline_depth`` concurrent
+  in-flight requests, so N independent metadata fetches or staged puts
+  cost ~ceil(N / depth) RTTs instead of N.  ``pipeline_depth=1`` degrades
+  to one round trip per object — the comparison arm of
+  ``bench_object_store_sync`` / ``bench_write_pipeline``.
 
 Fault injection is seeded and lock-protected, so a test run is
 reproducible; ``injected_faults`` / ``requests`` counters expose what the
-simulation actually did.
+simulation actually did, and ``serial_rounds()`` reports how many
+*sequential* round-trip slots the request stream occupied (a batch of N
+over depth d counts ceil(N / d), not N) — the number the write-pipelining
+benchmarks report as "serial RTTs per commit".
 """
 
 from __future__ import annotations
@@ -28,7 +32,7 @@ from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Sequence
 
-from repro.lst.storage.base import TransientStorageError
+from repro.lst.storage.base import PutIfAbsentError, TransientStorageError
 
 _MAX_POOL = 32
 
@@ -63,6 +67,8 @@ class SimulatedObjectStore:
         self._pool: ThreadPoolExecutor | None = None
         self.requests = 0
         self.injected_faults = 0
+        self.batch_items = 0     # requests issued through a pipelined batch
+        self.batch_rounds = 0    # sequential rounds those batches occupied
 
     # -- simulation core ---------------------------------------------------
     def _roll(self, rate: float) -> bool:
@@ -125,27 +131,40 @@ class SimulatedObjectStore:
     # the contract a retry layer needs to refetch ONLY the throttled items
     # of a batch instead of replaying the whole fan-out
     def read_many_settled(self, paths: Sequence[str]) -> list:
-        return self._fan_out([(p, None) for p in paths])
+        return self._fan_out([(p, None) for p in paths], self._read_one)
 
     def read_many_ranges_settled(
             self, requests: Sequence[tuple[str, int, int]]) -> list:
-        return self._fan_out([(p, (off, ln)) for p, off, ln in requests])
+        return self._fan_out([(p, (off, ln)) for p, off, ln in requests],
+                             self._read_one)
 
-    def _fan_out(self, items: list) -> list:
-        def one(item):
-            path, rng = item
-            try:
-                if rng is None:
-                    return self.read_bytes(path)
-                return self.read_bytes_range(path, *rng)
-            except TransientStorageError as e:
-                return e
-
-        if self.profile.pipeline_depth <= 1 or len(items) <= 1:
+    def _fan_out(self, items: list, one) -> list:
+        n = len(items)
+        if n:
+            with self._lock:
+                self.batch_items += n
+                self.batch_rounds += -(-n // self.profile.pipeline_depth)
+        if self.profile.pipeline_depth <= 1 or n <= 1:
             return [one(it) for it in items]
         # each in-flight request pays its RTT on a pool thread, so the batch
         # costs ~ceil(N / depth) round trips of wall clock
-        return list(self._batch_pool(len(items)).map(one, items))
+        return list(self._batch_pool(n).map(one, items))
+
+    def _read_one(self, item):
+        path, rng = item
+        try:
+            if rng is None:
+                return self.read_bytes(path)
+            return self.read_bytes_range(path, *rng)
+        except TransientStorageError as e:
+            return e
+
+    def serial_rounds(self) -> int:
+        """Sequential round-trip slots the request stream occupied so far:
+        every non-batched request is its own round; a pipelined batch of N
+        counts ceil(N / pipeline_depth)."""
+        with self._lock:
+            return self.requests - self.batch_items + self.batch_rounds
 
     def exists(self, path: str) -> bool:
         self._request("HEAD")
@@ -166,6 +185,28 @@ class SimulatedObjectStore:
         if self._roll(self.profile.ambiguous_put_rate):
             # the write landed but the caller never hears about it
             raise TransientStorageError("timeout after apply (PUT)")
+
+    def write_many(self, items: Sequence[tuple[str, bytes]], *,
+                   overwrite: bool = False) -> None:
+        _raise_first(self.write_many_settled(items, overwrite=overwrite))
+
+    def write_many_settled(self, items: Sequence[tuple[str, bytes]], *,
+                           overwrite: bool = False) -> list:
+        """Pipelined batch puts with per-item *settled* outcomes: ``None``
+        on success, :class:`TransientStorageError` (throttled, or applied
+        with the response lost) or :class:`PutIfAbsentError` (lost the
+        create race) per failed item — the contract the retry layer needs
+        to re-put ONLY the failed items and run the ambiguous-put
+        disambiguation per item instead of replaying the whole fan-out."""
+        def one(item):
+            path, data = item
+            try:
+                self.write_bytes(path, data, overwrite=overwrite)
+                return None
+            except (TransientStorageError, PutIfAbsentError) as e:
+                return e
+
+        return self._fan_out(list(items), one)
 
     def delete(self, path: str) -> None:
         self._request("DELETE")

@@ -107,7 +107,8 @@ class LakeTable:
             for i, k in enumerate(map(tuple, keys)):
                 groups.setdefault(k, []).append(i)
             groups = {k: np.array(v) for k, v in groups.items()}
-        adds = []
+        version = self.handle.current_version()
+        files = []
         for key, idx in groups.items():
             pv = dict(zip(pcols, key))
             sub = {c: np.asarray(a)[idx] for c, a in columns.items()}
@@ -117,15 +118,17 @@ class LakeTable:
             for part in splits:
                 fid = uuid.uuid4().hex[:12]
                 pdir = st.partition_spec.path_for(pv) if pv else "data"
-                rel = f"{pdir}/{fid}_{self.handle.current_version()}.chunk"
-                adds.append(chunkfile.write_chunk(
-                    self.fs, self.base, rel, part, partition_values=pv))
+                files.append((f"{pdir}/{fid}_{version}.chunk", part, pv, None))
+        # all chunk files of the commit flushed in one pipelined round; the
+        # metadata commit below is what makes them visible
+        adds = chunkfile.write_chunks(self.fs, self.base, files)
         return self.handle.commit(adds, operation="WRITE")
 
     def delete_where(self, pred: Predicate) -> str:
         """Copy-on-write delete (paper §2, Listing 1 line 3)."""
         st = self.state()
-        removes, adds = [], []
+        version = self.handle.current_version()
+        removes, rewrites = [], []
         for f in st.files.values():
             if not pred.may_match_file(f):
                 continue
@@ -137,13 +140,13 @@ class LakeTable:
             if keep.any():
                 fid = uuid.uuid4().hex[:12]
                 pdir = f.path.rsplit("/", 1)[0]
-                rel = f"{pdir}/{fid}_{self.handle.current_version()}.chunk"
-                adds.append(chunkfile.write_chunk(
-                    self.fs, self.base, rel,
-                    {c: a[keep] for c, a in cols.items()},
-                    partition_values=f.partition_values, extra=extra))
+                rel = f"{pdir}/{fid}_{version}.chunk"
+                rewrites.append((rel, {c: a[keep] for c, a in cols.items()},
+                                 f.partition_values, extra))
         if not removes:
             return self.handle.current_version()
+        # the copied (COW-rewritten) chunk files flush in one pipelined round
+        adds = chunkfile.write_chunks(self.fs, self.base, rewrites)
         return self.handle.commit(adds, removes, operation="DELETE")
 
     def evolve_schema(self, new_schema: Schema) -> str:

@@ -132,6 +132,96 @@ def test_changed_cycle_costs_o_new_source_reads_o1_target_reads():
     assert gets[4] <= 4 + 8
 
 
+class _HeadReadCounter:
+    """Delegating wrapper counting *head-discovery* requests on one source
+    table: log/timeline listings (delta ``_delta_log/``, hudi ``.hoodie/``),
+    ``version-hint.text`` reads, and iceberg metadata existence probes —
+    the requests a head probe or a head re-read costs, as opposed to
+    content reads of log segments / instant payloads / metadata JSONs."""
+
+    def __init__(self, inner, base, fmt):
+        self.inner = inner
+        self.base = base
+        self.fmt = fmt
+        self.head_reads = 0
+
+    def list_dir(self, path):
+        probe_dir = {"delta": "_delta_log", "iceberg": "metadata",
+                     "hudi": ".hoodie"}[self.fmt]
+        if path.startswith(self.base) and path.rstrip("/").endswith(probe_dir):
+            self.head_reads += 1
+        return self.inner.list_dir(path)
+
+    def read_bytes(self, path):
+        if path.startswith(self.base) and self.fmt == "iceberg" and \
+                path.endswith("version-hint.text"):
+            self.head_reads += 1
+        return self.inner.read_bytes(path)
+
+    def exists(self, path):
+        if path.startswith(self.base) and self.fmt == "iceberg" and \
+                ("version-hint" in path or ".metadata.json" in path):
+            self.head_reads += 1
+        return self.inner.exists(path)
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+
+@pytest.mark.parametrize("fmt,targets", [("delta", ("iceberg",)),
+                                         ("iceberg", ("delta",)),
+                                         ("hudi", ("delta",))])
+def test_changed_cycle_reads_source_head_exactly_once(fmt, targets):
+    """The daemon's probe doubles as the cycle's head hint: planner
+    ``current_commit()`` and the index tail refresh consume that one probe,
+    so a CHANGED cycle costs exactly ONE source-head read per table —
+    previously ~3 (probe, planner head, refresh head)."""
+    raw = MemoryFS()
+    t = _mk_table(raw, "bkt/src", fmt)
+    counter = _HeadReadCounter(raw, "bkt/src", fmt)
+    fs = layer_fs(counter)
+    daemon = SyncDaemon(_cfg(["bkt/src"], src=fmt, targets=targets), fs,
+                        clock=ManualClock())
+    daemon.run_cycle()                           # FULL bootstrap
+    assert daemon.run_cycle().idle               # warm + quiet
+
+    _append(t, 3)
+    counter.head_reads = 0
+    rep = daemon.run_cycle()
+    assert rep.changed == 1 and rep.units_drained == len(targets)
+    assert rep.results[0].commits_synced == 3
+    assert counter.head_reads == 1, counter.head_reads
+
+    # and the hint is scoped to the cycle: the NEXT cycle's probe is a
+    # fresh head read (one), not a stale cache hit
+    counter.head_reads = 0
+    assert daemon.run_cycle().idle
+    assert counter.head_reads == 1
+
+
+def test_hinted_refresh_detects_head_behind_anchor():
+    """A probed head BEHIND the index anchor (restore / divergent rewrite)
+    must trigger a full rebuild, not silently splice an empty tail and keep
+    serving the vanished head."""
+    from repro.core import MetadataCache
+
+    raw = MemoryFS()
+    _mk_table(raw, "bkt/t", "delta", n_commits=6)       # v0 .. v6
+    idx = MetadataCache(raw).index("delta", "bkt/t")
+    idx.ensure_built()
+    assert idx.head() == "6"
+    for v in range(4, 7):                               # rewind to v3
+        raw.delete(f"bkt/t/_delta_log/{v:020d}.json")
+    token = idx.probe()
+    assert token == "3"
+    idx.refresh()
+    try:
+        assert idx.head() == "3"
+        assert idx.versions()[-1] == "3"
+    finally:
+        idx.end_cycle()
+
+
 # ----------------------------------------------------- bounded drain backpressure
 def test_backlog_drains_in_ceil_n_over_k_cycles():
     raw = MemoryFS()

@@ -246,6 +246,67 @@ def test_crash_prefix_recovery_on_simulated_store():
     assert sorted(got["k"].tolist()) == sorted(t.read_all()["k"].tolist())
 
 
+# ------------------------------------------------ pipelined batch WRITES
+def test_write_many_matches_sequential_semantics():
+    fs = MemoryFS()
+    fs.write_many([("bkt/a", b"1"), ("bkt/b", b"2")])
+    assert fs.read_bytes("bkt/a") == b"1" and fs.read_bytes("bkt/b") == b"2"
+    with pytest.raises(PutIfAbsentError):        # put-if-absent by default
+        fs.write_many([("bkt/c", b"3"), ("bkt/a", b"clobber")])
+    fs.write_many([("bkt/a", b"new")], overwrite=True)
+    assert fs.read_bytes("bkt/a") == b"new"
+
+
+def test_write_many_retries_only_failed_items():
+    """A throttled staged flush re-puts its 503'd items, not the batch."""
+    raw = MemoryFS()
+    items = [(f"bkt/o{i}", b"payload-%d" % i) for i in range(32)]
+    sim = SimulatedObjectStore(raw, StorageProfile(fault_rate=0.3, seed=5))
+    fs = RetryingFS(sim, RetryPolicy(max_attempts=10), **NO_SLEEP)
+    fs.write_many(items)
+    assert [raw.read_bytes(p) for p, _ in items] == [d for _, d in items]
+    assert fs.retries > 0
+    # requests ~= N + retried items, far below N * attempts
+    assert sim.requests < 2 * len(items)
+
+
+def test_write_many_ambiguous_put_mid_pipeline_resolved():
+    """A staged put that APPLIES but loses its response mid-pipeline is
+    recognized as our own write via per-item read-back — while a genuine
+    lost race in the same batch still surfaces as a conflict."""
+    raw = MemoryFS()
+    sim = SimulatedObjectStore(raw, StorageProfile(ambiguous_put_rate=1.0))
+    fs = RetryingFS(sim, RetryPolicy(max_attempts=3), **NO_SLEEP)
+    items = [(f"bkt/m{i}", b"manifest-%d" % i) for i in range(8)]
+    fs.write_many(items)                          # every response is lost
+    assert [raw.read_bytes(p) for p, _ in items] == [d for _, d in items]
+    # a pre-existing object with FOREIGN content is a real conflict
+    raw.write_bytes("bkt/taken", b"foreign-writer")
+    with pytest.raises(PutIfAbsentError):
+        fs.write_many([("bkt/fresh", b"x"), ("bkt/taken", b"mine")])
+    assert raw.read_bytes("bkt/taken") == b"foreign-writer"
+
+
+def test_write_many_is_pipelined_under_rtt():
+    raw = MemoryFS()
+    items = [(f"bkt/w{i}", b"x") for i in range(12)]
+    rtt = 0.010
+
+    def timed(depth):
+        fs = SimulatedObjectStore(
+            raw, StorageProfile(rtt_ms=rtt * 1000, pipeline_depth=depth))
+        t0 = time.perf_counter()
+        fs.write_many([(f"{p}.d{depth}", d) for p, d in items])
+        return time.perf_counter() - t0, fs.requests, fs.serial_rounds()
+
+    seq_dt, seq_reqs, seq_rounds = timed(1)
+    bat_dt, bat_reqs, bat_rounds = timed(16)
+    assert seq_reqs == bat_reqs == len(items)   # same request count...
+    assert seq_dt >= len(items) * rtt           # ...serial pays every RTT
+    assert bat_dt < seq_dt / 2                  # ...pipelined overlaps them
+    assert seq_rounds == len(items) and bat_rounds == 1
+
+
 # --------------------------------------------------------- batch pipelining
 def test_read_many_is_pipelined_under_rtt():
     raw = MemoryFS()
@@ -436,9 +497,13 @@ def test_verify_stats_across_sync_and_detects_corruption():
 
 # Pinned censuses for the scenario in _warm_drain (delta source -> iceberg
 # target, warm shared cache, 4-commit backlog, transactional drain):
-# unit = 5 GET (target metadata + hint + tail entries) + 16 PUT (4 commits x
-# manifest/manifest-list/metadata/hint) + 4 HEAD; run adds the planner's
-# tail refresh (one GET per new source commit) and head/list probes.
-PER_UNIT_REQUESTS_4_COMMIT_DRAIN = 25
-PER_RUN_REQUESTS_4_COMMIT_DRAIN = 39
+# unit = 1 GET (the parent manifest-list — the plan-time metadata read now
+# seeds the transaction, so begin re-reads NOTHING) + 13 PUT (4 commits x
+# manifest/manifest-list/metadata, staged + serial, plus ONE deferred
+# version-hint move per flush — PR 5's write pipelining, down from 25
+# requests when begin re-discovered the head and every commit rewrote the
+# hint); run adds the planner's tail refresh (one GET per new source
+# commit), the plan-time target state read, and head/list probes.
+PER_UNIT_REQUESTS_4_COMMIT_DRAIN = 14
+PER_RUN_REQUESTS_4_COMMIT_DRAIN = 27
 MAX_REQUESTS_PER_NEW_COMMIT = 6

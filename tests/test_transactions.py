@@ -313,7 +313,145 @@ def test_delta_transaction_survives_concurrent_writer(fs):
     assert len(st.files) == 3        # create-era file + interloper + txn
 
 
-# -------------------------------------------------------- chunkfile footer
+# ------------------------------------------- staged (pipelined) write path
+class _DieAfterPuts:
+    """Pass-through FS whose writes fail hard after a budget — a
+    deterministic 'process died mid-flush' for staged-write recovery."""
+
+    def __init__(self, inner, puts_allowed: int):
+        self.inner = inner
+        self.puts_allowed = puts_allowed
+
+    def write_bytes(self, path, data, *, overwrite=False):
+        if self.puts_allowed <= 0:
+            raise IOError("simulated crash (connection gone)")
+        self.puts_allowed -= 1
+        return self.inner.write_bytes(path, data, overwrite=overwrite)
+
+    def write_many(self, items, *, overwrite=False):
+        for p, d in items:
+            self.write_bytes(p, d, overwrite=overwrite)
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+
+def test_crash_between_staged_flush_and_commit_point():
+    """Kill the drain AFTER the staged flush (manifests + manifest-lists
+    landed) but BEFORE the first commit-point metadata put: the staged
+    objects are unreferenced orphans, the table stays readable at the
+    previous version, and a clean re-run converges."""
+    from repro.lst.storage import MemoryFS
+
+    raw = MemoryFS()
+    base = "bkt/t"
+    t = LakeTable.create(raw, base, SCHEMA, "delta", PartitionSpec(["part"]))
+    for i in range(2):
+        t.append({"k": np.array([i], np.int64), "part": np.array(["p0"])})
+    cfg = _cfg([base], "delta", ["iceberg"])
+    res = run_sync(cfg, raw)
+    assert res[0].ok and res[0].mode == "FULL"
+    prev = LakeTable.open(raw, base, "iceberg")
+    prev_version = prev.handle.current_version()
+    prev_rows = sorted(prev.read_all()["k"].tolist())
+    for i in range(4):
+        t.append({"k": np.array([100 + i], np.int64),
+                  "part": np.array(["p1"])})
+
+    # a 4-commit iceberg drain stages 8 objects (4 add-manifests + 4
+    # manifest-lists); the source-side chunk writes happen before the sync.
+    # Allow exactly the staged flush, then die on the commit-point put.
+    dying = _DieAfterPuts(raw, 8)
+    res = run_sync(cfg, dying)
+    assert not res[0].ok                          # the unit died
+
+    after = LakeTable.open(raw, base, "iceberg")
+    assert after.handle.current_version() == prev_version
+    assert sorted(after.read_all()["k"].tolist()) == prev_rows
+    # staged orphans exist but are unreferenced — the table is coherent
+    res = run_sync(cfg, raw)                      # recovery = rerun
+    assert res[0].ok and res[0].mode == "INCREMENTAL"
+    assert res[0].commits_synced == 4
+    got = sorted(LakeTable.open(raw, base, "iceberg").read_all()["k"].tolist())
+    assert got == sorted(t.read_all()["k"].tolist())
+
+
+def test_aborted_flush_still_moves_hint_over_landed_prefix():
+    """A flush that lands some commit points and then dies must still move
+    ``version-hint.text`` over the landed prefix — otherwise a daemon's
+    ``head_token`` probe keeps reporting the old head and never replans
+    the table (missed-change bug)."""
+    from repro.lst.storage import MemoryFS
+
+    raw = MemoryFS()
+    base = "bkt/t"
+    t = _mk_table2(raw, base, "iceberg", 1)
+    handle = t.handle
+    tok_before = handle.head_token()
+    txn = handle.transaction()
+    for i in range(3):
+        txn.commit([chunkfile.DataFileMeta(path=f"data/h{i}.chunk",
+                                           size_bytes=1, record_count=1)], [])
+
+    # fail the SECOND commit-point put hard (not a conflict): one commit
+    # lands, then the flush aborts
+    orig = raw.write_bytes
+    state = {"meta_puts": 0}
+
+    def failing(path, data, *, overwrite=False):
+        if path.endswith(".metadata.json"):
+            state["meta_puts"] += 1
+            if state["meta_puts"] == 2:
+                raise IOError("simulated crash")
+        return orig(path, data, overwrite=overwrite)
+
+    raw.write_bytes = failing
+    with pytest.raises(IOError):
+        txn.flush()
+    raw.write_bytes = orig
+
+    assert handle.head_token() != tok_before       # probe sees the prefix
+    assert len(handle.versions()) == 2             # pre-txn append + 1 landed
+
+
+def _mk_table2(fs, base, fmt, n_commits):
+    t = LakeTable.create(fs, base, SCHEMA, fmt, PartitionSpec(["part"]))
+    for i in range(n_commits):
+        t.append({"k": np.array([i, i + 100], np.int64),
+                  "part": np.array([f"p{i % 2}", "p0"])})
+    return t
+
+
+def test_serial_round_trips_per_commit_are_o1():
+    """The write side of a transactional drain occupies O(1) *serial*
+    round-trip slots per commit: all staged objects of the chain share
+    pipelined batch rounds, so growing the backlog 4 -> 16 adds ~1 serial
+    slot per extra commit (its metadata put), not ~4."""
+    from repro.lst.storage import (MemoryFS, RetryPolicy, SimulatedObjectStore,
+                                   StorageProfile, layer_fs)
+
+    def drain_rounds(backlog):
+        raw = MemoryFS()
+        base = "bkt/t"
+        t = LakeTable.create(raw, base, SCHEMA, "delta",
+                             PartitionSpec(["part"]),
+                             {"delta.checkpointInterval": "100000"})
+        t.append({"k": np.array([1], np.int64), "part": np.array(["p0"])})
+        cfg = _cfg([base], "delta", ["iceberg"])
+        assert run_sync(cfg, raw)[0].ok
+        for i in range(backlog):
+            t.append({"k": np.array([100 + i], np.int64),
+                      "part": np.array(["p1"])})
+        sim = SimulatedObjectStore(raw, StorageProfile(pipeline_depth=16))
+        fs = layer_fs(sim, retry=RetryPolicy())
+        before = sim.serial_rounds()
+        res = run_sync(cfg, fs)
+        assert res[0].ok and res[0].commits_synced == backlog
+        return sim.serial_rounds() - before
+
+    r4, r16 = drain_rounds(4), drain_rounds(16)
+    per_extra_commit = (r16 - r4) / 12
+    assert per_extra_commit <= 2.0, (r4, r16)
 def test_chunk_stats_footer_range_read(tmp_table_path):
     fs = CountingFS()
     cols = {"a": np.arange(50_000, dtype=np.int64),

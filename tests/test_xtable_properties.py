@@ -215,6 +215,71 @@ def test_full_sync_fallback_when_history_cleaned(fs):
     assert got == want == sorted(list(range(10)) + [100])
 
 
+def test_manifest_compaction_bounds_snapshot_reads():
+    """A 64-commit incremental chain with ``manifestCompactionThreshold: 8``
+    keeps a cold snapshot read FLAT (bounded by the threshold, not the chain
+    length — without compaction it reads one manifest per commit), and the
+    compacted target's end state is identical to the uncompacted drain's."""
+    from repro.lst import MemoryFS
+
+    def grow_and_drain(threshold, commits):
+        raw = MemoryFS()
+        base = "bkt/t"
+        t = LakeTable.create(raw, base, SCHEMA, "delta",
+                             PartitionSpec(["part"]),
+                             {"delta.checkpointInterval": "100000"})
+        t.append({"k": np.array([1], np.int64), "part": np.array(["p0"])})
+        d = {"sourceFormat": "DELTA", "targetFormats": ["ICEBERG"],
+             "datasets": [{"tableBasePath": base}]}
+        if threshold:
+            d["manifestCompactionThreshold"] = threshold
+        cfg = SyncConfig.from_dict(d)
+        assert run_sync(cfg, raw)[0].mode == "FULL"
+        # the incremental chain, drained in rounds like a daemon would
+        for r in range(8):
+            for i in range(commits // 8):
+                t.append({"k": np.array([100 * r + i], np.int64),
+                          "part": np.array(["p1"])})
+            res = run_sync(cfg, raw)
+            assert res[0].ok and res[0].mode == "INCREMENTAL"
+        return raw, base, t
+
+    def snapshot_reads(raw, base):
+        from repro.lst.storage import layer_fs
+        fs = layer_fs(raw)
+        st = LakeTable.open(fs, base, "iceberg").state()
+        return fs.stats().get, st
+
+    raw32, base, _ = grow_and_drain(8, 32)
+    raw64, _, t64 = grow_and_drain(8, 64)
+    reads32, _ = snapshot_reads(raw32, base)
+    reads64, st64 = snapshot_reads(raw64, base)
+    # flat in chain length, and bounded by the threshold (+ metadata JSON,
+    # hint, manifest list), instead of one read per chain commit
+    assert reads64 == reads32, (reads32, reads64)
+    assert reads64 <= 8 + 4, reads64
+
+    raw_plain, _, t_plain = grow_and_drain(None, 64)
+    reads_plain, st_plain = snapshot_reads(raw_plain, base)
+    # the uncompacted arm really does pay O(chain) manifest reads
+    assert reads_plain > 64, reads_plain
+
+    # end states equivalent: each target mirrors ITS source exactly (file
+    # names embed per-run uuids, so arms compare against their own source),
+    # and the two arms agree on the logical rows
+    assert set(st64.files) == set(t64.state().files)
+    assert set(st_plain.files) == set(t_plain.state().files)
+    got64 = sorted(LakeTable.open(raw64, base, "iceberg")
+                   .read_all()["k"].tolist())
+    got_plain = sorted(LakeTable.open(raw_plain, base, "iceberg")
+                       .read_all()["k"].tolist())
+    assert got64 == got_plain == sorted(t64.read_all()["k"].tolist())
+    # stats carried through the fold (compared against the source metadata)
+    src_files = t64.state().files
+    for p, f in st64.files.items():
+        assert f.stats_dict() == src_files[p].stats_dict(), p
+
+
 def test_listing2_config_parsing():
     cfg = SyncConfig.from_yaml("""
 sourceFormat: HUDI
