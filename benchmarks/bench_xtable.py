@@ -23,6 +23,13 @@ paper without numbered tables, so each benchmark pins one §3 property):
                    rounds (RTT sweep, serial round-trips per commit), plus
                    the daemon's per-cycle head memoization (source-head
                    reads per changed cycle, 3 -> 1)
+* chunk codec    — the chunkfile string-column codec: vectorized
+                   fixed-width C casts vs. the legacy per-string msgpack
+                   loop (encode + decode)
+* fleet          — the sharded sync fleet: one-cycle lag-drain throughput
+                   over ~1k tiered tables at 1 / 2 / 4 workers, and
+                   lag-aware (urgency) vs. FIFO scheduling under a
+                   maxUnitsPerCycle drain budget (hot-tier p50/p99 lag)
 """
 
 from __future__ import annotations
@@ -160,24 +167,35 @@ def bench_checkpoint_throughput(report):
 
 
 def bench_serial_vs_concurrent(report):
-    """Planner/executor payoff: 4 datasets x 2 targets, FULL bootstrap and
+    """Planner/executor payoff: N datasets x 2 targets, FULL bootstrap and
     an incremental backlog, synced serially (max_workers=1) vs. on the
-    thread pool. Same plan, same units — only the execution strategy moves."""
-    fs = LocalFS()
+    auto-sized thread pool.  Same plan, same units — only the execution
+    strategy moves.
 
-    def build_fleet():
+    The measured regime is the one the concurrency targets: a simulated
+    object store (2ms RTT), where every unit is dominated by round trips
+    the pool overlaps.  Against zero-RTT local storage the units are pure
+    CPU-bound metadata translation, and the executor's auto sizing caps
+    the pool at the core count instead of convoying 8 threads on the GIL
+    (the sub-1x "concurrent" regression this row used to measure).
+    """
+    n_ds = 2 if QUICK else 4
+
+    def build_fleet(raw):
         bases = []
-        for _ in range(2 if QUICK else 4):
-            base, t = _mk_table(fs, "delta", n_commits=4 if QUICK else 8,
-                                rows_per_commit=256)
+        rng = np.random.default_rng(0)
+        for i in range(n_ds):
+            base = f"bkt/sc{i}"
+            t = LakeTable.create(raw, base, SCHEMA, "delta",
+                                 PartitionSpec(["part"]),
+                                 {"delta.checkpointInterval": "100000"})
+            for _ in range(4 if QUICK else 8):
+                n = 256
+                t.append({"k": rng.integers(0, 1 << 30, n),
+                          "part": np.array([f"p{i % 4}" for i in range(n)]),
+                          "val": rng.random(n)})
             bases.append((base, t))
         return bases
-
-    def cfg_for(bases):
-        return SyncConfig.from_dict({
-            "sourceFormat": "DELTA",
-            "targetFormats": ["ICEBERG", "HUDI"],
-            "datasets": [{"tableBasePath": b} for b, _ in bases]})
 
     def backlog(bases):
         rng = np.random.default_rng(1)
@@ -189,9 +207,16 @@ def bench_serial_vs_concurrent(report):
                           "val": rng.random(n)})
 
     times = {}
-    for label, workers in (("serial", 1), ("concurrent", 8)):
-        bases = build_fleet()
-        cfg = cfg_for(bases)
+    for label, workers in (("serial", 1), ("concurrent", None)):
+        raw = MemoryFS()
+        bases = build_fleet(raw)
+        cfg = SyncConfig.from_dict({
+            "sourceFormat": "DELTA",
+            "targetFormats": ["ICEBERG", "HUDI"],
+            "datasets": [{"tableBasePath": b} for b, _ in bases]})
+        fs = layer_fs(raw, profile=StorageProfile(rtt_ms=2,
+                                                  pipeline_depth=16),
+                      retry=RetryPolicy())
         t0 = time.perf_counter()
         res = run_sync(cfg, fs, max_workers=workers)
         times[f"full.{label}"] = time.perf_counter() - t0
@@ -201,11 +226,10 @@ def bench_serial_vs_concurrent(report):
         res = run_sync(cfg, fs, max_workers=workers)
         times[f"incr.{label}"] = time.perf_counter() - t0
         assert all(r.ok and r.mode == "INCREMENTAL" for r in res), res
-    n_ds = 2 if QUICK else 4
     for phase in ("full", "incr"):
         s, c = times[f"{phase}.serial"], times[f"{phase}.concurrent"]
         report(f"executor.{phase}.serial", s * 1e6,
-               f"{n_ds} datasets x 2 targets")
+               f"{n_ds} datasets x 2 targets @2ms RTT")
         report(f"executor.{phase}.concurrent", c * 1e6,
                f"speedup={s / max(c, 1e-9):.2f}x")
 
@@ -630,6 +654,195 @@ def bench_write_pipeline(report):
            f"hinted={hinted} legacy={legacy} (per table per cycle)")
 
 
+def bench_chunk_encode(report):
+    """Chunkfile string codec: the vectorized fixed-width C-cast path vs.
+    the legacy per-string msgpack listcomp, on the string-column shape
+    ``LakeTable.append`` actually produces.  The legacy loop held the GIL
+    for the whole column — the convoy behind the CPU-bound concurrent
+    bootstrap regression; the vectorized path is a single ``astype`` cast
+    (ASCII) or buffer memcpy (UCS4)."""
+    import msgpack
+
+    from repro.lst.chunkfile import (_decode_array, _encode_array,
+                                     _encode_str_legacy)
+
+    n = 30_000 if QUICK else 200_000
+    arr = np.array([f"part-{i % 97:03d}/file-{i:011d}" for i in range(n)])
+    decl, raw = _encode_array(arr, False)          # doubles as the warm-up
+    legacy_raw = _encode_str_legacy(arr)
+    legacy_decl = {"dtype": "str", "shape": list(arr.shape)}
+    _decode_array(decl, raw), _decode_array(legacy_decl, legacy_raw)
+
+    reps = range(3)                                # best-of-3 absorbs noise
+    dt_enc = min(_timed(lambda: _encode_array(arr, False)) for _ in reps)
+    dt_enc_leg = min(_timed(lambda: _encode_str_legacy(arr)) for _ in reps)
+    dt_dec = min(_timed(lambda: _decode_array(decl, raw)) for _ in reps)
+    dt_dec_leg = min(_timed(lambda: _decode_array(legacy_decl, legacy_raw))
+                     for _ in reps)
+    assert (_decode_array(decl, raw) == arr).all()
+    assert msgpack.unpackb(legacy_raw)[0] == arr[0]
+
+    report("chunk.encode_str.legacy", dt_enc_leg * 1e6,
+           f"{n} strings (msgpack listcomp)")
+    report("chunk.encode_str.vectorized", dt_enc * 1e6,
+           f"enc={decl['enc']} speedup={dt_enc_leg / max(dt_enc, 1e-9):.2f}x")
+    report("chunk.decode_str.legacy", dt_dec_leg * 1e6, f"{n} strings")
+    report("chunk.decode_str.vectorized", dt_dec * 1e6,
+           f"speedup={dt_dec_leg / max(dt_dec, 1e-9):.2f}x")
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def _percentiles(lags: list, n_total: int) -> tuple[int, int]:
+    """p50/p99 over ``n_total`` tables where ``lags`` holds only the
+    nonzero entries (the daemon's lag dict omits caught-up tables)."""
+    full = sorted([0] * (n_total - len(lags)) + list(lags))
+    return (full[int(0.50 * (n_total - 1))],
+            full[int(0.99 * (n_total - 1))])
+
+
+def bench_fleet(report):
+    """The sharded sync fleet at (simulated) scale.
+
+    Phase 1 — lag-drain throughput scaling: ~1k single-target tables with
+    a tiered backlog (hot 10% / warm 30% / cold 60%) behind a simulated
+    object store (1 ms RTT quick / 10 ms full, pipelined batches),
+    drained for one daemon cycle at 1 / 2 / 4 workers from
+    identical cloned stores.  ``maxCommitsPerSync=4`` gives the cycle the
+    daemon's real backpressure shape.  workers=1 is the *serial* daemon
+    path (the honest baseline — no fleet machinery at all).  Derived
+    columns: commits drained, requests/sec, p50/p99 remaining lag in
+    commits, and the throughput scaling vs. 1 worker.
+
+    Phase 2 — lag-aware vs. FIFO scheduling at equal width: a smaller
+    fleet under a ``maxUnitsPerCycle`` budget tight enough that not every
+    changed table drains each cycle, driven through rounds of tiered
+    appends.  The urgency scheduler (backlog x EWMA commit rate) keeps
+    the hot tables first in line; FIFO lets cold tables crowd them out.
+    Derived columns: hot-tier p50/p99 lag after the last round.
+    """
+    from repro.core import FleetOptions, ManualClock, SyncDaemon
+
+    # ---- phase 1: drain throughput scaling over workers ----------------
+    n1 = 60 if QUICK else 1000
+    # quick keeps the RTT tiny so CI smoke stays fast; the full shape
+    # measures the regime the fleet exists for (real object-store RTT,
+    # where probe/plan/drain overlap across workers is the win)
+    rtt = 1 if QUICK else 10
+    tiers = lambda i: 8 if i % 10 == 0 else (4 if i % 10 < 4 else 1)  # noqa: E731
+
+    raw = MemoryFS()
+    rng = np.random.default_rng(0)
+
+    def grow(t, k):
+        for _ in range(k):
+            t.append({"k": rng.integers(0, 1 << 30, 8),
+                      "part": np.array([f"p{i % 4}" for i in range(8)]),
+                      "val": rng.random(8)})
+
+    tables = []
+    for i in range(n1):
+        base = f"bkt/f{i:04d}"
+        t = LakeTable.create(raw, base, SCHEMA, "delta",
+                             PartitionSpec(["part"]),
+                             {"delta.checkpointInterval": "100000"})
+        grow(t, 1)
+        tables.append((base, t))
+    cfg = SyncConfig.from_dict({
+        "sourceFormat": "DELTA", "targetFormats": ["ICEBERG"],
+        "maxCommitsPerSync": 4,
+        "datasets": [{"tableBasePath": b} for b, _ in tables]})
+    # bootstrap on the raw store (setup, not measured), then the tiered
+    # backlog every arm will face
+    res = run_sync(cfg, layer_fs(raw))
+    assert all(r.ok and r.mode == "FULL" for r in res)
+    appended = {}
+    for i, (base, t) in enumerate(tables):
+        grow(t, tiers(i))
+        appended[base] = tiers(i)
+
+    dt_w1 = None
+    for workers in (1, 2, 4):
+        arm_raw = raw.clone()
+        fs = layer_fs(arm_raw, profile=StorageProfile(rtt_ms=rtt,
+                                                      pipeline_depth=16),
+                      retry=RetryPolicy())
+        daemon = SyncDaemon(cfg, fs, clock=ManualClock(),
+                            fleet=FleetOptions(workers=workers))
+        before = fs.stats().requests
+        t0 = time.perf_counter()
+        rep = daemon.run_cycle()
+        dt = time.perf_counter() - t0
+        daemon.close()
+        assert rep.units_drained == n1, rep.summary()
+        reqs = fs.stats().requests - before
+        p50, p99 = _percentiles(rep.lag.values(), n1)
+        if workers == 1:
+            dt_w1 = dt
+        report(f"fleet.drain.w{workers}", dt * 1e6,
+               f"{n1} tables commits={rep.commits_applied} "
+               f"reqs/s={reqs / max(dt, 1e-9):.0f} "
+               f"p50_lag={p50} p99_lag={p99} "
+               f"speedup={dt_w1 / max(dt, 1e-9):.2f}x")
+
+    # ---- phase 2: urgency vs fifo under a drain budget ------------------
+    n2 = 40 if QUICK else 300
+    rounds = 4
+    hot = lambda i: i % 8 == 0          # noqa: E731 — hot tier, spread out
+
+    raw2 = MemoryFS()
+    tables2 = []
+    for i in range(n2):
+        base = f"bkt/s{i:04d}"
+        t = LakeTable.create(raw2, base, SCHEMA, "delta",
+                             PartitionSpec(["part"]),
+                             {"delta.checkpointInterval": "100000"})
+        grow(t, 1)
+        tables2.append((base, t))
+    cfg2 = SyncConfig.from_dict({
+        "sourceFormat": "DELTA", "targetFormats": ["ICEBERG"],
+        "datasets": [{"tableBasePath": b} for b, _ in tables2]})
+    res = run_sync(cfg2, layer_fs(raw2))
+    assert all(r.ok and r.mode == "FULL" for r in res)
+
+    for kind in ("urgency", "fifo"):
+        arm_raw = raw2.clone()
+        fs = layer_fs(arm_raw)
+        clock = ManualClock()
+        daemon = SyncDaemon(cfg2, fs, clock=clock,
+                            fleet=FleetOptions(workers=2, scheduler=kind,
+                                               max_units_per_cycle=n2 // 8))
+        arm_tables = [(b, LakeTable.open(arm_raw, b, "delta"))
+                      for b, _ in tables2]
+        # results key by dataset *name* (the base path's last component)
+        names = [b.rsplit("/", 1)[-1] for b, _ in arm_tables]
+        written = dict.fromkeys(names, 0)
+        synced = dict.fromkeys(names, 0)
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            for i, (_, t) in enumerate(arm_tables):
+                k = 4 if hot(i) else 1
+                grow(t, k)
+                written[names[i]] += k
+            rep = daemon.run_cycle()
+            for r in rep.results:
+                synced[r.dataset] += r.commits_synced
+            clock.advance(1.0)
+        dt = time.perf_counter() - t0
+        daemon.close()
+        hot_lags = [written[nm] - synced[nm]
+                    for i, nm in enumerate(names) if hot(i)]
+        n_hot = len(hot_lags)
+        p50, p99 = _percentiles([v for v in hot_lags if v], n_hot)
+        report(f"fleet.sched.{kind}", dt * 1e6,
+               f"{n2} tables budget={n2 // 8}/cycle x{rounds} "
+               f"hot_p50_lag={p50} hot_p99_lag={p99}")
+
+
 def layer_puts(fs) -> int:
     return fs.stats().put
 
@@ -638,4 +851,4 @@ ALL = [bench_low_overhead, bench_incremental_vs_full, bench_omni_matrix,
        bench_file_count_scaling, bench_checkpoint_throughput,
        bench_serial_vs_concurrent, bench_backlog_drain,
        bench_object_store_sync, bench_continuous_sync,
-       bench_write_pipeline]
+       bench_write_pipeline, bench_chunk_encode, bench_fleet]

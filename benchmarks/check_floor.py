@@ -4,10 +4,12 @@ Compares a fresh ``--quick`` benchmark JSON against the committed
 ``BENCH_xtable.quick.json`` baseline and exits non-zero when any guarded
 row is more than ``--factor`` (default 3x) slower than its baseline.  The
 guarded rows are the ones that encode the architectural guarantees this
-repo's PRs established — the transactional backlog drain (``drain.*.txn``)
-and the pipelined write path (``write_pipeline.*``) — so silently
-reverting to a per-commit or serial-write code path fails the job even
-though every correctness test would still pass.
+repo's PRs established — the transactional backlog drain (``drain.*.txn``),
+the pipelined write path (``write_pipeline.*``), the executor's FULL
+bootstrap concurrency (``executor.full.*``), and the sharded sync fleet
+(``fleet.*``) — so silently reverting to a per-commit, serial-write, or
+single-worker code path fails the job even though every correctness test
+would still pass.
 
 The factor is deliberately loose: CI runners are noisy, and the guarded
 speedups are ~4x+, so a 3x regression means the mechanism is gone, not
@@ -15,28 +17,45 @@ that the machine was busy.  Rows present on only one side are ignored
 (new benchmarks should not fail the gate retroactively), but an EMPTY
 intersection fails — a renamed row must update the baseline knowingly.
 
+On top of the wall-clock floors, *speedup* floors check the fresh run's
+own derived ``speedup=`` column: ``executor.full.concurrent`` must beat
+its serial arm (>= 1.0x) — the concurrent bootstrap path regressing to
+slower-than-serial is exactly the failure mode PR 6 fixed, and it is
+invisible to a pure us-per-call comparison when both arms drift together.
+
 Usage: ``python benchmarks/check_floor.py NEW.json --baseline OLD.json``
 """
 
 import argparse
 import fnmatch
 import json
+import re
 import sys
 
-GUARDED = ("drain.*.txn", "write_pipeline.*")
+GUARDED = ("drain.*.txn", "write_pipeline.*", "executor.full.*", "fleet.*")
 # derived-metric rows (counters, not wall time) are not floor-checked
 EXCLUDE = ("write_pipeline.head_reads.*",)
+# row -> minimum value of its derived "speedup=N.NNx" column, checked on
+# the NEW run alone (both arms measured in the same process, so this floor
+# is immune to machine-speed drift)
+SPEEDUP_FLOORS = {"executor.full.concurrent": 1.0}
 
 
 def load_rows(path: str) -> dict:
     with open(path) as f:
         data = json.load(f)
-    return {r["name"]: float(r["us"]) for r in data.get("rows", [])}
+    return {r["name"]: (float(r["us"]), r.get("derived", ""))
+            for r in data.get("rows", [])}
 
 
 def guarded(name: str) -> bool:
     return any(fnmatch.fnmatch(name, g) for g in GUARDED) and \
         not any(fnmatch.fnmatch(name, e) for e in EXCLUDE)
+
+
+def parse_speedup(derived: str) -> float | None:
+    m = re.search(r"speedup=([0-9.]+)x", derived)
+    return float(m.group(1)) if m else None
 
 
 def main(argv=None) -> None:
@@ -51,23 +70,41 @@ def main(argv=None) -> None:
 
     new, base = load_rows(args.new), load_rows(args.baseline)
     checked, failures = 0, []
-    for name, base_us in sorted(base.items()):
+    for name, (base_us, _) in sorted(base.items()):
         if not guarded(name) or name not in new:
             continue
         checked += 1
-        ratio = new[name] / max(base_us, 1e-9)
+        new_us = new[name][0]
+        ratio = new_us / max(base_us, 1e-9)
         status = "FAIL" if ratio > args.factor else "ok"
-        print(f"{status:4s} {name}: {new[name]:.1f}us vs baseline "
+        print(f"{status:4s} {name}: {new_us:.1f}us vs baseline "
               f"{base_us:.1f}us ({ratio:.2f}x)")
         if ratio > args.factor:
             failures.append(name)
+
+    for name, floor in sorted(SPEEDUP_FLOORS.items()):
+        if name not in new:
+            continue
+        checked += 1
+        speedup = parse_speedup(new[name][1])
+        if speedup is None:
+            print(f"FAIL {name}: no speedup= in derived column "
+                  f"({new[name][1]!r})")
+            failures.append(name)
+            continue
+        status = "FAIL" if speedup < floor else "ok"
+        print(f"{status:4s} {name}: speedup={speedup:.2f}x "
+              f"(floor {floor:.2f}x)")
+        if speedup < floor:
+            failures.append(name)
+
     if checked == 0:
         print("# perf floor: no guarded rows matched between "
               f"{args.new} and {args.baseline}", file=sys.stderr)
         sys.exit(1)
     if failures:
         print(f"# perf floor: {len(failures)} of {checked} guarded rows "
-              f"regressed >{args.factor}x: {failures}", file=sys.stderr)
+              f"failed: {failures}", file=sys.stderr)
         sys.exit(1)
     print(f"# perf floor: {checked} guarded rows within {args.factor}x "
           f"of baseline")

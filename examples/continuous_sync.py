@@ -10,6 +10,7 @@ targets fresh, then the daemon drains the tail gracefully and stops.
 Usage::
 
     PYTHONPATH=src python examples/continuous_sync.py
+    PYTHONPATH=src python examples/continuous_sync.py --workers 4
 
     # the same daemon, driven from your own code:
     from repro.core import SyncConfig, SyncDaemon, run_daemon
@@ -37,15 +38,27 @@ drains them through the transactional executor path — a quiet table costs
 exactly its head probe.  ``maxCommitsPerSync`` bounds each cycle's drain;
 a transient storage error backs off the one affected table with jittered
 exponential delays while every other table keeps syncing.
+
+``--workers N`` (N > 1) runs the same cycles through the sharded sync
+fleet (``core/fleet.py``): probes and planning fan out over N worker
+threads, and the planned (dataset, target) cells drain through per-worker
+shard queues — most-urgent-first, with work stealing.  Equivalent to a
+``fleet: {workers: N}`` block in the config.
 """
 
+import argparse
 import sys
 
 sys.path.insert(0, "src")
 
+args = argparse.ArgumentParser(description="continuous-sync daemon demo")
+args.add_argument("--workers", type=int, default=1,
+                  help="fleet width; >1 engages the sharded fleet cycle path")
+args = args.parse_args()
+
 import numpy as np
 
-from repro.core import SyncConfig, SyncDaemon, Telemetry
+from repro.core import FleetOptions, SyncConfig, SyncDaemon, Telemetry
 from repro.lst import LakeTable
 from repro.lst.schema import Field, PartitionSpec, Schema
 from repro.lst.storage import shared_store
@@ -74,7 +87,12 @@ daemon:
   backoff: {baseDelayMs: 100}
 """)
 telemetry = Telemetry()
-daemon = SyncDaemon(config, telemetry=telemetry)
+daemon = SyncDaemon(config, telemetry=telemetry,
+                    fleet=FleetOptions(workers=args.workers))
+if args.workers > 1:
+    print(f"== sharded fleet: {args.workers} workers "
+          f"({daemon.fleet_opts.shard_strategy}-sharded, "
+          f"{daemon.fleet_opts.scheduler} scheduling)")
 
 # --- scripted workload: appends interleaved with daemon cycles ------------
 print("== bootstrap cycle (FULL sync into both targets)")

@@ -7,11 +7,13 @@ explicit plan -> shared-metadata-cache -> concurrent-execute pipeline (see
 facade with persisted state, caching, and telemetry).
 """
 
-from repro.core.config import (DaemonOptions, DatasetConfig, StorageOptions,
-                               SyncConfig)
+from repro.core.config import (DaemonOptions, DatasetConfig, FleetOptions,
+                               StorageOptions, SyncConfig)
 from repro.core.daemon import (DaemonCycleReport, ManualClock, SyncDaemon,
                                SystemClock, run_daemon)
 from repro.core.executor import SyncExecutor
+from repro.core.fleet import (CommitRateEstimator, LagAwareScheduler,
+                              SyncFleet)
 from repro.core.ir import (InternalDataFile, InternalSnapshot, InternalTable,
                            TableChange, fold_changes)
 from repro.core.metadata_cache import MetadataCache, TableMetadataIndex
@@ -21,10 +23,12 @@ from repro.core.sync import SyncResult, XTableSyncer, run_sync
 from repro.core.targets import make_target
 from repro.core.telemetry import Telemetry
 
-__all__ = ["DaemonOptions", "DatasetConfig", "StorageOptions", "SyncConfig",
+__all__ = ["DaemonOptions", "DatasetConfig", "FleetOptions",
+           "StorageOptions", "SyncConfig",
            "InternalDataFile", "InternalSnapshot", "InternalTable",
            "TableChange", "fold_changes", "make_source", "make_target",
            "run_sync", "SyncResult", "XTableSyncer", "Telemetry", "SyncPlan",
            "SyncPlanner", "SyncUnit", "SyncExecutor", "MetadataCache",
            "TableMetadataIndex", "DaemonCycleReport", "ManualClock",
-           "SyncDaemon", "SystemClock", "run_daemon"]
+           "SyncDaemon", "SystemClock", "run_daemon",
+           "CommitRateEstimator", "LagAwareScheduler", "SyncFleet"]

@@ -38,6 +38,15 @@ Accepts YAML text, a file path, or a plain dict.  Optional knobs:
   ``backoff: {baseDelayMs, maxDelayMs, multiplier, jitter, seed}`` — the
   jittered per-table backoff applied when a table's probe or drain hits a
   (transient) storage error.
+* ``fleet`` — sharded sync fleet (see ``core/fleet.py``): ``workers`` (> 1
+  engages the fleet cycle path, as does setting a drain budget),
+  ``shardStrategy`` (``hash`` |
+  ``roundRobin``), ``stealThresholdMs`` (min queue age before an idle
+  worker may steal a cell), ``urgencyHalfLifeMs`` (the commit-rate EWMA
+  half-life behind urgency = backlog x rate), ``scheduler`` (``urgency`` |
+  ``fifo``), ``maxUnitsPerCycle`` (per-cycle drain budget across all
+  workers — the top-budget cells of the global scheduler ordering),
+  and ``mode`` (``thread`` | ``process``).
 """
 
 from __future__ import annotations
@@ -144,6 +153,58 @@ class DaemonOptions:
 
 
 @dataclass(frozen=True)
+class FleetOptions:
+    """Sharded sync fleet knobs (the ``fleet:`` block; see ``core/fleet.py``).
+
+    ``workers > 1`` (or any ``maxUnitsPerCycle`` budget) switches the
+    daemon's cycle from the serial per-dataset loop to the fleet path:
+    probes and planning fan out over the worker pool, and the planned
+    (dataset, target) cells drain through per-worker shard queues with
+    work stealing, ordered by the lag-aware scheduler.
+    """
+    workers: int = 1
+    shard_strategy: str = "hash"           # hash | round_robin
+    steal_threshold_ms: float = 0.0        # min cell age before stealable
+    urgency_half_life_ms: float = 60_000.0  # commit-rate EWMA half-life
+    scheduler: str = "urgency"             # urgency | fifo
+    max_units_per_cycle: int | None = None  # per-cycle drain budget (None = all)
+    mode: str = "thread"                   # thread | process (FULL bootstraps)
+
+    def __post_init__(self):
+        if self.workers < 1:
+            raise ValueError("fleet workers must be >= 1")
+        if self.shard_strategy not in ("hash", "round_robin"):
+            raise ValueError("shardStrategy must be 'hash' or 'roundRobin'")
+        if self.scheduler not in ("urgency", "fifo"):
+            raise ValueError("scheduler must be 'urgency' or 'fifo'")
+        if self.mode not in ("thread", "process"):
+            raise ValueError("fleet mode must be 'thread' or 'process'")
+        if self.steal_threshold_ms < 0:
+            raise ValueError("stealThresholdMs must be >= 0")
+        if self.urgency_half_life_ms <= 0:
+            raise ValueError("urgencyHalfLifeMs must be > 0")
+        if self.max_units_per_cycle is not None \
+                and self.max_units_per_cycle < 1:
+            raise ValueError("maxUnitsPerCycle must be >= 1")
+
+    @staticmethod
+    def from_dict(d: dict) -> "FleetOptions":
+        strategy = str(d.get("shardStrategy", "hash"))
+        # accept camelCase (config idiom) and snake_case spellings
+        strategy = {"roundrobin": "round_robin"}.get(
+            strategy.replace("_", "").lower(), strategy)
+        mupc = d.get("maxUnitsPerCycle")
+        return FleetOptions(
+            workers=int(d.get("workers", 1)),
+            shard_strategy=strategy,
+            steal_threshold_ms=float(d.get("stealThresholdMs", 0.0)),
+            urgency_half_life_ms=float(d.get("urgencyHalfLifeMs", 60_000.0)),
+            scheduler=str(d.get("scheduler", "urgency")).lower(),
+            max_units_per_cycle=int(mupc) if mupc is not None else None,
+            mode=str(d.get("mode", "thread")).lower())
+
+
+@dataclass(frozen=True)
 class SyncConfig:
     source_format: str
     target_formats: tuple
@@ -166,6 +227,8 @@ class SyncConfig:
     storage: StorageOptions = field(default_factory=StorageOptions)
     # continuous-sync daemon scheduling (poll interval, idle stop, backoff)
     daemon: DaemonOptions = field(default_factory=DaemonOptions)
+    # sharded sync fleet (workers > 1 engages the fleet cycle path)
+    fleet: FleetOptions = field(default_factory=FleetOptions)
 
     def __post_init__(self):
         for f in (self.source_format, *self.target_formats):
@@ -198,7 +261,8 @@ class SyncConfig:
             manifest_compaction_threshold=int(mct) if mct is not None
             else None,
             storage=StorageOptions.from_dict(d.get("storage", {})),
-            daemon=DaemonOptions.from_dict(d.get("daemon", {})))
+            daemon=DaemonOptions.from_dict(d.get("daemon", {})),
+            fleet=FleetOptions.from_dict(d.get("fleet", {})))
 
     def build_fs(self, telemetry=None):
         """Construct the storage stack this config describes.

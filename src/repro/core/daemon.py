@@ -50,8 +50,9 @@ import threading
 import time
 from dataclasses import dataclass, field
 
-from repro.core.config import DatasetConfig, SyncConfig
+from repro.core.config import DatasetConfig, FleetOptions, SyncConfig
 from repro.core.executor import SyncExecutor
+from repro.core.fleet import SyncFleet
 from repro.core.metadata_cache import MetadataCache
 from repro.core.plan import ERROR, SKIP, SyncPlan, SyncPlanner
 from repro.core.telemetry import Telemetry
@@ -115,6 +116,8 @@ class _TableWatch:
     pending: bool = False      # bounded/failed drain left commits behind
     failures: int = 0          # consecutive probe/drain errors
     not_before: float = 0.0    # backoff window end (clock time)
+    lag: int = 0               # commits still behind after the last cycle
+                               # (feeds the fleet's commit-rate estimator)
 
 
 @dataclass
@@ -133,6 +136,10 @@ class DaemonCycleReport:
     units_skipped: int = 0
     units_errored: int = 0
     commits_applied: int = 0       # source commits applied across all units
+    units_deferred: int = 0        # fleet drain budget pushed these to the
+                                   # next cycle (maxUnitsPerCycle)
+    workers: int = 1               # fleet width this cycle (1 = serial path)
+    steals: int = 0                # cells drained off their home shard
     lag: dict = field(default_factory=dict)   # (dataset, target) -> commits
                                               # still behind after the cycle
     failures: list = field(default_factory=list)  # (dataset, phase, error)
@@ -172,7 +179,8 @@ class SyncDaemon:
     def __init__(self, config: SyncConfig, fs=None,
                  telemetry: Telemetry | None = None,
                  cache: MetadataCache | None = None, *,
-                 max_workers: int | None = None, clock=None):
+                 max_workers: int | None = None, clock=None,
+                 fleet: FleetOptions | None = None):
         self.config = config
         self.telemetry = telemetry or Telemetry()
         self.fs = fs or config.build_fs(self.telemetry)
@@ -180,15 +188,45 @@ class SyncDaemon:
         self.max_workers = max_workers
         self.clock = clock or SystemClock()
         self.opts = config.daemon
+        self.fleet_opts = fleet if fleet is not None else config.fleet
+        self._fleet: SyncFleet | None = None
+        # the fleet path engages for real width OR a drain budget (the
+        # budget/scheduler only exist there — a budgeted single worker
+        # still needs the urgency ordering to pick WHICH cells drain)
+        if self.fleet_opts.workers > 1 or \
+                self.fleet_opts.max_units_per_cycle is not None:
+            if self.fleet_opts.mode == "process":
+                self._check_process_mode_fs()
+            self._fleet = SyncFleet(self.fleet_opts, self.clock)
         self.cycles_run = 0
         self._rng = random.Random(self.opts.seed)
         self._watch: dict[str, _TableWatch] = {}
         self._stop_event = threading.Event()
         self._drain_on_stop = False
 
+    def _check_process_mode_fs(self) -> None:
+        """Process mode ships picklable units to child processes that
+        reopen the store themselves — only a plain local filesystem
+        satisfies that (simulated/instrumented layers live in this
+        process's memory and would silently not be exercised)."""
+        from repro.lst.storage.local import LocalFS
+        base = self.fs
+        while hasattr(base, "inner"):
+            base = base.inner
+        if not isinstance(base, LocalFS):
+            raise ValueError("fleet mode 'process' requires local storage "
+                             "(file:// or plain paths)")
+
     # ------------------------------------------------------------------ api
+    def close(self) -> None:
+        """Release fleet worker pools (no-op for the serial path)."""
+        if self._fleet is not None:
+            self._fleet.close()
+
     def run_cycle(self) -> DaemonCycleReport:
         """One watch -> replan -> drain pass over every dataset."""
+        if self._fleet is not None:
+            return self._run_fleet_cycle()
         rep = DaemonCycleReport(cycle=self.cycles_run,
                                 started_at=self.clock.now())
         t0 = time.perf_counter()
@@ -314,6 +352,122 @@ class SyncDaemon:
         self.clock.sleep(seconds)
         return self._stop_event.is_set()
 
+    # ---------------------------------------------------------- fleet cycle
+    def _run_fleet_cycle(self) -> DaemonCycleReport:
+        """One watch -> replan -> drain pass across the sharded fleet.
+
+        Same contract as the serial cycle — one head probe per eligible
+        table, per-table error isolation and backoff, ``maxCommitsPerSync``
+        backpressure — but the probe and plan phases fan out over the
+        worker pool (they are RTT-bound), and the planned cells drain
+        through per-worker shard queues: most-urgent-first per the
+        lag-aware scheduler, with idle workers stealing from the longest
+        queue, and ``maxUnitsPerCycle`` bounding the whole pass.
+        """
+        fleet = self._fleet
+        rep = DaemonCycleReport(cycle=self.cycles_run,
+                                started_at=self.clock.now(),
+                                workers=fleet.opts.workers)
+        t0 = time.perf_counter()
+        stats_fn = getattr(self.fs, "stats", None)
+        before = stats_fn().as_dict() if stats_fn is not None else None
+
+        now = self.clock.now()
+        eligible = []
+        for ds in self.config.datasets:
+            w = self._watch.setdefault(ds.path, _TableWatch())
+            if now < w.not_before:
+                rep.backed_off += 1
+                continue
+            eligible.append((ds, w))
+
+        # every eligible table's cycle hint must be cleared exactly once,
+        # whatever phase it leaves the cycle in
+        ended: set[str] = set()
+
+        def end(ds: DatasetConfig) -> None:
+            if ds.path not in ended:
+                ended.add(ds.path)
+                self._end_cycle(ds)
+
+        try:
+            # watch: still exactly ONE head request per table, overlapped
+            # across the pool instead of serialized
+            probes = fleet.map(lambda e: self._probe(e[0]), eligible)
+            changed = []
+            for (ds, w), (token, err) in zip(eligible, probes):
+                if err is not None:
+                    self._table_failed(ds, w, rep, "probe", err)
+                    end(ds)
+                    continue
+                rep.probed += 1
+                if token == w.token and not w.pending:
+                    rep.quiet += 1
+                    end(ds)
+                    continue
+                rep.changed += 1
+                changed.append((ds, w, token))
+
+            # replan: per-dataset planning (source tail refresh + target
+            # state reads) is RTT-bound too — same pool
+            planned = fleet.map(lambda c: self._plan_ds(c[0], c[2]), changed)
+            work = []
+            writers: dict = {}
+            for (ds, w, token), (res, err) in zip(changed, planned):
+                if err is not None:
+                    self._table_failed(ds, w, rep, "plan", err)
+                    end(ds)
+                    continue
+                units, ds_writers = res
+                writers.update(ds_writers)
+                rep.units_planned += len(units)
+                # feed the commit-rate EWMA with how far the head moved
+                # past what was already pending after the last cycle
+                backlog = max((u.backlog for u in units), default=0)
+                fleet.scheduler.observe(ds.path, max(0, backlog - w.lag),
+                                        now)
+                work.append((ds, w, token, units))
+
+            # drain: one global urgency ordering across datasets, sharded
+            # over the worker queues, stolen when a shard stalls
+            all_units = fleet.scheduler.order(
+                [u for _, _, _, units in work for u in units], now)
+            executor = SyncExecutor(
+                self.fs, self.cache, self.telemetry, 1,
+                manifest_compaction_threshold=self.config
+                .manifest_compaction_threshold)
+            executor.prepare(writers)
+            outcome = fleet.drain(all_units, executor,
+                                  budget=fleet.opts.max_units_per_cycle)
+            rep.steals = outcome.steals
+            by_unit = {id(u): r
+                       for u, r in zip(all_units, outcome.results)}
+            for ds, w, token, units in work:
+                self._account(ds, w, token, units,
+                              [by_unit.get(id(u)) for u in units], rep)
+                end(ds)
+        finally:
+            for ds, _w in eligible:
+                end(ds)
+
+        if before is not None:
+            after = stats_fn().as_dict()
+            rep.storage_ops = {k: after[k] - before[k] for k in after}
+        rep.elapsed_s = time.perf_counter() - t0
+        self.cycles_run += 1
+        self.telemetry.bump("daemon.cycles")
+        self.telemetry.record("daemon", "*", "cycle", rep.summary(),
+                              rep.elapsed_s)
+        return rep
+
+    def _plan_ds(self, ds: DatasetConfig, token: str) -> tuple:
+        """Plan one dataset's cells (fleet plan phase); returns the units
+        plus the planner's opened target writers for the executor."""
+        planner = SyncPlanner(self.config, self.fs, self.cache,
+                              self.telemetry)
+        units = planner.plan_dataset(ds, head_hint=token)
+        return units, planner.writers
+
     # ------------------------------------------------------------- internals
     def _probe(self, ds: DatasetConfig) -> str:
         """One cheap head probe, memoized on the index as the cycle's head
@@ -337,12 +491,29 @@ class SyncDaemon:
             manifest_compaction_threshold=self.config
             .manifest_compaction_threshold)
         results = executor.execute(SyncPlan(units, planner.writers))
-        rep.results.extend(results)
+        self._account(ds, w, token, units, results, rep)
 
+    def _account(self, ds: DatasetConfig, w: _TableWatch, token: str,
+                 units: list, results: list,
+                 rep: DaemonCycleReport) -> None:
+        """Fold one dataset's unit results into the report and its watch
+        state (shared by the serial and fleet paths).  A ``None`` result
+        is a cell the fleet's drain budget deferred: it counts as lag and
+        keeps the dataset pending, but is no error."""
         pending = False
         failed = False
+        deferred = False
+        lag_left = 0
         for u, r in zip(units, results):
             key = (u.dataset, u.target_format)
+            if r is None:
+                rep.units_deferred += 1
+                deferred = True
+                if u.backlog:
+                    rep.lag[key] = u.backlog
+                    lag_left = max(lag_left, u.backlog)
+                continue
+            rep.results.append(r)
             if r.mode == SKIP:
                 rep.units_skipped += 1
             elif r.mode == ERROR:
@@ -350,6 +521,7 @@ class SyncDaemon:
                 failed = True
                 if u.backlog:
                     rep.lag[key] = u.backlog
+                    lag_left = max(lag_left, u.backlog)
             else:
                 rep.units_drained += 1
                 rep.commits_applied += r.commits_synced
@@ -357,6 +529,7 @@ class SyncDaemon:
                 if left:
                     rep.lag[key] = left
                     pending = True
+                    lag_left = max(lag_left, left)
 
         if failed:
             # keep the old token so the next eligible cycle replans, and
@@ -366,9 +539,10 @@ class SyncDaemon:
             self._backoff(ds, w, rep)
         else:
             w.token = token
-            w.pending = pending
+            w.pending = pending or deferred
             w.failures = 0
             w.not_before = 0.0
+        w.lag = lag_left
 
     def _table_failed(self, ds: DatasetConfig, w: _TableWatch,
                       rep: DaemonCycleReport, phase: str,
@@ -399,13 +573,18 @@ def run_daemon(config: SyncConfig, fs=None,
                max_cycles_idle: int | None = None,
                max_workers: int | None = None,
                cache: MetadataCache | None = None,
-               clock=None) -> list[DaemonCycleReport]:
+               clock=None,
+               fleet: FleetOptions | None = None) -> list[DaemonCycleReport]:
     """Run a continuous-sync daemon to completion (the CLI / service body).
 
     ``cycles`` bounds the run for scripts and tests; an unbounded call
     relies on the config's ``maxCyclesIdle`` or an external ``stop()``.
-    Returns the per-cycle reports.
+    ``fleet`` overrides the config's ``fleet:`` block (workers > 1 runs
+    the sharded fleet cycle path).  Returns the per-cycle reports.
     """
     daemon = SyncDaemon(config, fs, telemetry, cache,
-                        max_workers=max_workers, clock=clock)
-    return daemon.run(cycles=cycles, max_cycles_idle=max_cycles_idle)
+                        max_workers=max_workers, clock=clock, fleet=fleet)
+    try:
+        return daemon.run(cycles=cycles, max_cycles_idle=max_cycles_idle)
+    finally:
+        daemon.close()

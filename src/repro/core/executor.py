@@ -17,6 +17,7 @@ result list.
 
 from __future__ import annotations
 
+import os
 import time
 from concurrent.futures import ThreadPoolExecutor
 from contextlib import nullcontext
@@ -29,6 +30,7 @@ from repro.core.plan import (ERROR, FULL, INCREMENTAL, SKIP, SyncPlan,
 from repro.core.sources import make_source
 from repro.core.targets import make_target
 from repro.core.telemetry import Telemetry
+from repro.lst.storage.base import latency_bound
 
 DEFAULT_MAX_WORKERS = 8
 
@@ -77,12 +79,34 @@ class SyncExecutor:
         self._writers = dict(plan.writers)
         if not units:
             return []
-        workers = self.max_workers or min(DEFAULT_MAX_WORKERS, len(units))
+        workers = self.max_workers or self._auto_workers(len(units))
         if workers <= 1 or len(units) == 1:
             return [self.execute_unit(u) for u in units]
         with ThreadPoolExecutor(max_workers=workers,
                                 thread_name_prefix="xtable-sync") as pool:
             return list(pool.map(self.execute_unit, units))
+
+    def prepare(self, writers: dict) -> None:
+        """Install the planner's target writers for direct
+        ``execute_unit`` calls — the fleet path drives units through its
+        own shard queues instead of ``execute()``."""
+        self._writers = dict(writers)
+
+    def _auto_workers(self, n_units: int) -> int:
+        """Pool width when the caller didn't pin one.
+
+        Against a latency-bound store every unit spends its time waiting
+        on round trips, so a wide pool overlaps them — the win the paper's
+        "negligible overhead" claim rests on.  Against zero-RTT storage
+        the units are pure CPU-bound metadata translation holding the GIL;
+        threads beyond the hardware's parallelism only convoy on it (the
+        measured sub-1x "concurrent" bootstrap regression), so the width
+        is capped at the core count.
+        """
+        workers = min(DEFAULT_MAX_WORKERS, n_units)
+        if not latency_bound(self.fs):
+            workers = min(workers, max(1, os.cpu_count() or 1))
+        return workers
 
     def execute_unit(self, unit: SyncUnit) -> SyncResult:
         t0 = time.perf_counter()

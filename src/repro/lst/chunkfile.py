@@ -105,16 +105,46 @@ def _column_stats(arr: np.ndarray) -> ColumnStats:
                 return ColumnStats(None, None, count, nan)
             return ColumnStats(_scalar(ok.min()), _scalar(ok.max()), count, nan)
         return ColumnStats(_scalar(flat.min()), _scalar(flat.max()), count, 0)
-    if arr.dtype.kind in ("U", "S") and arr.size:
+    if arr.dtype.kind == _STR_KIND and arr.size:
+        # tolist() already yields Python str for U dtype (no per-string
+        # conversion pass needed), and builtin min/max order by code point
+        # exactly like numpy's U comparisons
+        vals = arr.reshape(-1).tolist()
+        return ColumnStats(min(vals), max(vals), count, 0)
+    if arr.dtype.kind == "S" and arr.size:
         vals = [str(v) for v in arr.reshape(-1).tolist()]
         return ColumnStats(min(vals), max(vals), count, 0)
     return ColumnStats(None, None, count, 0)
 
 
+def _encode_str_legacy(arr: np.ndarray) -> bytes:
+    """The pre-fleet string encoding: a per-string Python loop into a
+    msgpack list.  Kept for decode back-compat tests and as the
+    benchmark's comparison arm — new files always use the vectorized
+    fixed-width path below."""
+    return msgpack.packb([str(s) for s in arr.reshape(-1)])
+
+
 def _encode_array(arr: np.ndarray, compress: bool) -> tuple[dict, bytes]:
-    if arr.dtype.kind == _STR_KIND:  # unicode -> utf-8 msgpack list
-        raw = msgpack.packb([str(s) for s in arr.reshape(-1)])
-        decl = {"dtype": "str", "shape": list(arr.shape)}
+    if arr.dtype.kind == _STR_KIND:
+        # unicode -> fixed-width columns via C-level casts, instead of the
+        # legacy per-string Python listcomp into msgpack (that loop held
+        # the GIL for the whole column — the convoy that made concurrent
+        # CPU-bound bootstraps slower than serial).  ASCII columns cast to
+        # 1-byte-per-char S dtype in one shot; anything else ships the
+        # array's native fixed-width UCS4 buffer (a plain memcpy).
+        # Trailing NULs are not representable in numpy's U dtype to begin
+        # with, so fixed-width padding loses nothing.
+        flat = np.ascontiguousarray(arr.reshape(-1))
+        width = max(1, flat.dtype.itemsize // 4)
+        decl = {"dtype": "str", "shape": list(arr.shape), "width": width}
+        try:
+            raw = flat.astype(f"S{width}").tobytes()
+            decl["enc"] = "ascii"
+        except UnicodeEncodeError:
+            raw = flat.tobytes()
+            decl["enc"] = "ucs4"
+            decl["udtype"] = flat.dtype.str   # preserves byte order
     else:
         raw = np.ascontiguousarray(arr).tobytes()
         decl = {"dtype": arr.dtype.str, "shape": list(arr.shape)}
@@ -129,6 +159,15 @@ def _decode_array(decl: Mapping, raw: bytes) -> np.ndarray:
         raw = zlib.decompress(raw)
     shape = tuple(decl["shape"])
     if decl["dtype"] == "str":
+        enc = decl.get("enc")
+        if enc == "ascii":
+            w = decl["width"]
+            return np.frombuffer(raw, dtype=f"S{w}") \
+                .astype(f"U{w}").reshape(shape)
+        if enc == "ucs4":
+            return np.frombuffer(
+                raw, dtype=np.dtype(decl["udtype"])).reshape(shape)
+        # legacy files: length-delimited msgpack list of strings
         return np.array(msgpack.unpackb(raw), dtype=np.str_).reshape(shape)
     return np.frombuffer(raw, dtype=np.dtype(decl["dtype"])).reshape(shape)
 

@@ -22,7 +22,8 @@ from repro.lst.storage.base import (FileSystem, PutIfAbsentError,
                                     SequentialBatchMixin,
                                     StorageRetryExhausted,
                                     TransientStorageError, fetch_many,
-                                    fetch_many_ranges, flush_many, join)
+                                    fetch_many_ranges, flush_many, join,
+                                    latency_bound)
 from repro.lst.storage.instrumented import InstrumentedFS, StorageStats
 from repro.lst.storage.local import LocalFS
 from repro.lst.storage.memory import MemoryFS
@@ -36,7 +37,8 @@ from repro.lst.storage.simulated import SimulatedObjectStore, StorageProfile
 __all__ = [
     "FileSystem", "PutIfAbsentError", "TransientStorageError",
     "StorageRetryExhausted", "SequentialBatchMixin", "fetch_many",
-    "fetch_many_ranges", "flush_many", "join", "LocalFS", "MemoryFS",
+    "fetch_many_ranges", "flush_many", "join", "latency_bound", "LocalFS",
+    "MemoryFS",
     "SimulatedObjectStore", "StorageProfile", "RetryingFS", "RetryPolicy",
     "InstrumentedFS", "StorageStats", "make_fs", "register_scheme",
     "resolve_uri", "scheme_of", "split_uri", "layer_fs", "shared_store",

@@ -133,6 +133,25 @@ def flush_many(fs, items: Sequence[tuple[str, bytes]], *,
         fs.write_bytes(p, data, overwrite=overwrite)
 
 
+def latency_bound(fs) -> bool:
+    """True when some layer of the storage stack pays a per-request round
+    trip (network-style object store), so callers should overlap requests
+    with wide I/O concurrency; false for in-memory / local-disk stacks
+    where extra threads only fight the GIL over CPU-bound work.
+
+    Layers advertise themselves with a truthy ``latency_bound`` attribute
+    (see :class:`~repro.lst.storage.simulated.SimulatedObjectStore`);
+    wrappers are unwrapped through their ``inner`` chain.
+    """
+    hops = 0
+    while fs is not None and hops < 16:
+        if getattr(fs, "latency_bound", False):
+            return True
+        fs = getattr(fs, "inner", None)
+        hops += 1
+    return False
+
+
 def join(*parts: str) -> str:
     """Join path segments with '/' (object-store style, no os.sep surprises)."""
     cleaned = [p.strip("/") if i else p.rstrip("/") for i, p in enumerate(parts) if p]

@@ -75,6 +75,16 @@ class MemoryFS(SequentialBatchMixin):
         with self._lock:
             self._objects.pop(_norm(path), None)
 
+    def clone(self) -> "MemoryFS":
+        """Independent snapshot copy of the whole store (objects are
+        immutable bytes, so only the key map is copied).  Benchmarks and
+        tests use it to run several arms from one identically-built
+        starting state."""
+        out = MemoryFS()
+        with self._lock:
+            out._objects = dict(self._objects)
+        return out
+
     # -- introspection (tests / benchmarks) --------------------------------
     def object_count(self) -> int:
         with self._lock:

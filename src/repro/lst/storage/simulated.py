@@ -70,6 +70,13 @@ class SimulatedObjectStore:
         self.batch_items = 0     # requests issued through a pipelined batch
         self.batch_rounds = 0    # sequential rounds those batches occupied
 
+    @property
+    def latency_bound(self) -> bool:
+        """Advertises per-request round trips to ``storage.base
+        .latency_bound`` (the executor widens its pool only when waiting
+        on RTTs actually overlaps)."""
+        return self.profile.rtt_ms > 0
+
     # -- simulation core ---------------------------------------------------
     def _roll(self, rate: float) -> bool:
         if rate <= 0.0:

@@ -495,6 +495,53 @@ def test_verify_stats_across_sync_and_detects_corruption():
     assert LakeTable.open(raw, "bkt/t", "delta").verify_stats() != []
 
 
+# ------------------------------------------------ chunkfile string codec
+def test_chunk_string_roundtrip_vectorized_paths():
+    """The fixed-width C-cast string codec round-trips every column shape
+    the table layer produces: ascii, non-ascii (UCS4 buffer), empty
+    strings, embedded NULs, 2D, and explicit padded widths — with and
+    without compression."""
+    from repro.lst.chunkfile import _decode_array, _encode_array
+
+    cases = [
+        np.array(["alpha", "b", "", "part-042/file-00000007"]),   # ascii
+        np.array(["héllo", "wörld", "día"]),                      # ucs4
+        np.array(["a\x00b", "c"]),                     # embedded (non-trailing) NUL
+        np.array([["aa", "bb"], ["cc", "dd"]]),                   # 2D
+        np.array(["x"], dtype="U16"),                             # padded width
+    ]
+    for arr in cases:
+        for compress in (False, True):
+            decl, raw = _encode_array(arr, compress)
+            back = _decode_array(decl, raw)
+            assert back.shape == arr.shape
+            assert (back == arr).all(), arr
+
+    decl, _ = _encode_array(cases[0], False)
+    assert decl["enc"] == "ascii"                 # 1 byte/char on the wire
+    decl, _ = _encode_array(cases[1], False)
+    assert decl["enc"] == "ucs4"                  # native buffer memcpy
+
+
+def test_chunk_string_legacy_decode_compat():
+    """Chunks written by the legacy msgpack-list codec (decl carries no
+    ``enc`` key) still decode byte-identically."""
+    from repro.lst.chunkfile import _decode_array, _encode_str_legacy
+
+    arr = np.array([["a", "bb"], ["ccc", "dddd"]])
+    raw = _encode_str_legacy(arr)
+    back = _decode_array({"dtype": "str", "shape": list(arr.shape)}, raw)
+    assert back.shape == arr.shape and (back == arr).all()
+
+
+def test_chunk_string_stats_match_builtin_ordering():
+    from repro.lst.chunkfile import _column_stats
+
+    arr = np.array(["p3", "p0", "p10", "p2"])
+    st = _column_stats(arr)
+    assert (st.min, st.max, st.count) == ("p0", "p3", 4)
+
+
 # Pinned censuses for the scenario in _warm_drain (delta source -> iceberg
 # target, warm shared cache, 4-commit backlog, transactional drain):
 # unit = 1 GET (the parent manifest-list — the plan-time metadata read now
