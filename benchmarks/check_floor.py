@@ -23,6 +23,13 @@ its serial arm (>= 1.0x) — the concurrent bootstrap path regressing to
 slower-than-serial is exactly the failure mode PR 6 fixed, and it is
 invisible to a pure us-per-call comparison when both arms drift together.
 
+*Request-pair* floors compare derived ``reqs=`` censuses between two rows
+of the NEW run: ``restart.cold`` must spend materially more storage
+requests than ``restart.warm`` — the checkpoint warm restart staying
+O(new commits) while the cold one rebuilds O(history) is the whole point
+of the durable-checkpoint subsystem, and it is a counter invariant, so it
+holds on any machine at any load.
+
 Usage: ``python benchmarks/check_floor.py NEW.json --baseline OLD.json``
 """
 
@@ -39,6 +46,12 @@ EXCLUDE = ("write_pipeline.head_reads.*",)
 # the NEW run alone (both arms measured in the same process, so this floor
 # is immune to machine-speed drift)
 SPEEDUP_FLOORS = {"executor.full.concurrent": 1.0}
+# (cheap row, expensive row) -> minimum expensive/cheap ratio of their
+# derived "reqs=N" censuses, checked on the NEW run alone (counters are
+# load-immune).  The quick shape's history is shallow, so the floor sits
+# well under the full run's ~4x — losing the checkpoint resume path makes
+# the two censuses EQUAL, which any floor > 1 catches.
+REQUEST_PAIR_FLOORS = {("restart.warm", "restart.cold"): 1.4}
 
 
 def load_rows(path: str) -> dict:
@@ -56,6 +69,11 @@ def guarded(name: str) -> bool:
 def parse_speedup(derived: str) -> float | None:
     m = re.search(r"speedup=([0-9.]+)x", derived)
     return float(m.group(1)) if m else None
+
+
+def parse_reqs(derived: str) -> int | None:
+    m = re.search(r"reqs=([0-9]+)\b", derived)
+    return int(m.group(1)) if m else None
 
 
 def main(argv=None) -> None:
@@ -97,6 +115,22 @@ def main(argv=None) -> None:
               f"(floor {floor:.2f}x)")
         if speedup < floor:
             failures.append(name)
+
+    for (cheap, dear), floor in sorted(REQUEST_PAIR_FLOORS.items()):
+        if cheap not in new or dear not in new:
+            continue
+        checked += 1
+        a, b = parse_reqs(new[cheap][1]), parse_reqs(new[dear][1])
+        if not a or b is None:
+            print(f"FAIL {cheap}/{dear}: no reqs= in derived columns")
+            failures.append(f"{cheap}/{dear}")
+            continue
+        ratio = b / a
+        status = "FAIL" if ratio < floor else "ok"
+        print(f"{status:4s} {dear} vs {cheap}: reqs {b} vs {a} "
+              f"({ratio:.2f}x, floor {floor:.2f}x)")
+        if ratio < floor:
+            failures.append(f"{cheap}/{dear}")
 
     if checked == 0:
         print("# perf floor: no guarded rows matched between "

@@ -7,13 +7,16 @@ explicit plan -> shared-metadata-cache -> concurrent-execute pipeline (see
 facade with persisted state, caching, and telemetry).
 """
 
-from repro.core.config import (DaemonOptions, DatasetConfig, FleetOptions,
+from repro.core.checkpoint import CheckpointStore
+from repro.core.config import (CheckpointOptions, DaemonOptions,
+                               DatasetConfig, FleetOptions, HealthOptions,
                                StorageOptions, SyncConfig)
 from repro.core.daemon import (DaemonCycleReport, ManualClock, SyncDaemon,
                                SystemClock, run_daemon)
 from repro.core.executor import SyncExecutor
 from repro.core.fleet import (CommitRateEstimator, LagAwareScheduler,
                               SyncFleet)
+from repro.core.health import HealthTracker
 from repro.core.ir import (InternalDataFile, InternalSnapshot, InternalTable,
                            TableChange, fold_changes)
 from repro.core.metadata_cache import MetadataCache, TableMetadataIndex
@@ -23,8 +26,9 @@ from repro.core.sync import SyncResult, XTableSyncer, run_sync
 from repro.core.targets import make_target
 from repro.core.telemetry import Telemetry
 
-__all__ = ["DaemonOptions", "DatasetConfig", "FleetOptions",
-           "StorageOptions", "SyncConfig",
+__all__ = ["CheckpointOptions", "CheckpointStore", "DaemonOptions",
+           "DatasetConfig", "FleetOptions", "HealthOptions",
+           "HealthTracker", "StorageOptions", "SyncConfig",
            "InternalDataFile", "InternalSnapshot", "InternalTable",
            "TableChange", "fold_changes", "make_source", "make_target",
            "run_sync", "SyncResult", "XTableSyncer", "Telemetry", "SyncPlan",

@@ -47,6 +47,15 @@ Accepts YAML text, a file path, or a plain dict.  Optional knobs:
   ``fifo``), ``maxUnitsPerCycle`` (per-cycle drain budget across all
   workers — the top-budget cells of the global scheduler ordering),
   and ``mode`` (``thread`` | ``process``).
+* ``checkpoint`` — durable daemon checkpoint for crash-safe warm restarts
+  (see ``core/checkpoint.py``): ``enabled``, ``path`` (store-local dir,
+  default ``<first dataset>/_xtable/checkpoint``), ``intervalCycles``,
+  ``retain`` (generations kept), ``minWindow`` (index entries kept beyond
+  each table's pending lag).  The checkpoint is advisory — a restarted
+  daemon re-verifies it against the live head, which always wins.
+* ``health`` — per-table circuit breakers (see ``core/health.py``):
+  ``enabled`` (default true), ``failureThreshold``, ``openCooldownMs``,
+  ``halfOpenProbes``, ``quarantineAfter``, ``quarantineCooldownMs``.
 """
 
 from __future__ import annotations
@@ -205,6 +214,90 @@ class FleetOptions:
 
 
 @dataclass(frozen=True)
+class CheckpointOptions:
+    """Durable daemon checkpoint knobs (the ``checkpoint:`` block).
+
+    The checkpoint is *advisory*: it only seeds the restarted daemon's
+    in-memory state (sync tokens, metadata-index tail, backoff/health and
+    commit-rate estimates) so the first cycle costs O(new commits) instead
+    of a cold O(history) rebuild — the live table head is always
+    re-verified and wins over anything the checkpoint claims (see
+    ``core/checkpoint.py``).
+    """
+    enabled: bool = False
+    # store-local path of the checkpoint dir; None derives
+    # "<first dataset>/_xtable/checkpoint" so the default always lands in a
+    # namespace the daemon can already write
+    path: str | None = None
+    interval_cycles: int = 1       # save at most every N non-idle cycles
+    retain: int = 3                # generations kept (older ones pruned)
+    # index entries checkpointed beyond each table's pending lag, so a
+    # target that slipped a little further behind still resumes warm
+    min_window: int = 4
+
+    def __post_init__(self):
+        if self.interval_cycles < 1:
+            raise ValueError("checkpoint intervalCycles must be >= 1")
+        if self.retain < 1:
+            raise ValueError("checkpoint retain must be >= 1")
+        if self.min_window < 1:
+            raise ValueError("checkpoint minWindow must be >= 1")
+
+    @staticmethod
+    def from_dict(d: dict) -> "CheckpointOptions":
+        return CheckpointOptions(
+            enabled=bool(d.get("enabled", False)),
+            path=d.get("path"),
+            interval_cycles=int(d.get("intervalCycles", 1)),
+            retain=int(d.get("retain", 3)),
+            min_window=int(d.get("minWindow", 4)))
+
+
+@dataclass(frozen=True)
+class HealthOptions:
+    """Per-table circuit-breaker knobs (the ``health:`` block).
+
+    ``closed -> open -> half_open`` per table (see ``core/health.py``):
+    ``failureThreshold`` consecutive probe/plan/drain failures open the
+    breaker (the table is skipped — not even probed — until
+    ``openCooldownMs`` passes), then one half-open trial cycle either
+    closes it or re-opens; ``quarantineAfter`` consecutive opens move the
+    table to ``quarantined`` — parked until ``quarantineCooldownMs`` (and
+    excluded from ``stop(drain=True)``, so one poisoned table cannot hold
+    the daemon's shutdown hostage).
+    """
+    enabled: bool = True
+    failure_threshold: int = 5
+    open_cooldown_ms: float = 60_000.0
+    half_open_probes: int = 1          # successes to close from half-open
+    quarantine_after: int = 3          # consecutive opens before quarantine
+    quarantine_cooldown_ms: float = 3_600_000.0
+
+    def __post_init__(self):
+        if self.failure_threshold < 1:
+            raise ValueError("health failureThreshold must be >= 1")
+        if self.open_cooldown_ms < 0:
+            raise ValueError("health openCooldownMs must be >= 0")
+        if self.half_open_probes < 1:
+            raise ValueError("health halfOpenProbes must be >= 1")
+        if self.quarantine_after < 1:
+            raise ValueError("health quarantineAfter must be >= 1")
+        if self.quarantine_cooldown_ms < 0:
+            raise ValueError("health quarantineCooldownMs must be >= 0")
+
+    @staticmethod
+    def from_dict(d: dict) -> "HealthOptions":
+        return HealthOptions(
+            enabled=bool(d.get("enabled", True)),
+            failure_threshold=int(d.get("failureThreshold", 5)),
+            open_cooldown_ms=float(d.get("openCooldownMs", 60_000.0)),
+            half_open_probes=int(d.get("halfOpenProbes", 1)),
+            quarantine_after=int(d.get("quarantineAfter", 3)),
+            quarantine_cooldown_ms=float(
+                d.get("quarantineCooldownMs", 3_600_000.0)))
+
+
+@dataclass(frozen=True)
 class SyncConfig:
     source_format: str
     target_formats: tuple
@@ -229,6 +322,10 @@ class SyncConfig:
     daemon: DaemonOptions = field(default_factory=DaemonOptions)
     # sharded sync fleet (workers > 1 engages the fleet cycle path)
     fleet: FleetOptions = field(default_factory=FleetOptions)
+    # durable daemon checkpoint (crash-safe warm restarts)
+    checkpoint: CheckpointOptions = field(default_factory=CheckpointOptions)
+    # per-table circuit breakers (closed -> open -> half_open -> quarantined)
+    health: HealthOptions = field(default_factory=HealthOptions)
 
     def __post_init__(self):
         for f in (self.source_format, *self.target_formats):
@@ -262,9 +359,11 @@ class SyncConfig:
             else None,
             storage=StorageOptions.from_dict(d.get("storage", {})),
             daemon=DaemonOptions.from_dict(d.get("daemon", {})),
-            fleet=FleetOptions.from_dict(d.get("fleet", {})))
+            fleet=FleetOptions.from_dict(d.get("fleet", {})),
+            checkpoint=CheckpointOptions.from_dict(d.get("checkpoint", {})),
+            health=HealthOptions.from_dict(d.get("health", {})))
 
-    def build_fs(self, telemetry=None):
+    def build_fs(self, telemetry=None, *, sleep=None):
         """Construct the storage stack this config describes.
 
         The backend comes from the dataset URI scheme through the registry
@@ -272,7 +371,10 @@ class SyncConfig:
         FileSystem for the run); it is then layered per ``storage``:
         latency/fault simulation when injection knobs are set, the
         exponential-backoff retry layer, and the instrumented wrapper
-        feeding ``telemetry`` request/byte counters.
+        feeding ``telemetry`` request/byte counters.  ``sleep`` replaces
+        the retry layer's backoff sleeper — the daemon passes its injected
+        clock's ``sleep`` so retry backoff never wall-sleeps in tests or
+        benchmarks.
         """
         schemes = {scheme_of(ds.table_base_path) for ds in self.datasets}
         schemes.discard(None)       # plain paths ride the local backend
@@ -294,7 +396,7 @@ class SyncConfig:
             base = make_fs(scheme)
         return layer_fs(base, profile=profile,
                         retry=self.storage.retry_policy(),
-                        telemetry=telemetry)
+                        telemetry=telemetry, sleep=sleep)
 
     @staticmethod
     def from_yaml(text: str) -> "SyncConfig":

@@ -39,6 +39,21 @@ commit is an atomic put-if-absent, so there is no torn state to clean up).
 pending backlog, then stops — call ``stop()`` again to give up on a
 persistently failing table and exit immediately.
 
+Robustness (both opt-in through the config):
+
+* **Durable checkpoints** (``checkpoint:`` block, ``core/checkpoint.py``) —
+  every non-idle cycle persists the watch state, a metadata-index tail
+  seed, breaker states and commit-rate estimates as one conditionally-put
+  generation; a restarted daemon resumes at O(new commits) instead of a
+  cold O(history) rebuild.  The checkpoint is *advisory*: the first
+  cycle's probes re-verify every table against its live head, which
+  always wins.
+* **Per-table circuit breakers** (``health:`` block, ``core/health.py``) —
+  repeated failures open a breaker (the table is skipped outright, not
+  even probed, until a cooldown), repeated opens quarantine the table;
+  quarantined backlogs are excluded from ``stop(drain=True)`` so one
+  poisoned table cannot hold shutdown hostage.
+
 Facade: ``run_daemon(config, cycles=N)`` for scripts and operators;
 ``examples/continuous_sync.py`` drives it against an ``s3sim://`` store.
 """
@@ -50,12 +65,15 @@ import threading
 import time
 from dataclasses import dataclass, field
 
+from repro.core.checkpoint import CheckpointStore, decode_seed, encode_seed
 from repro.core.config import DatasetConfig, FleetOptions, SyncConfig
 from repro.core.executor import SyncExecutor
 from repro.core.fleet import SyncFleet
+from repro.core.health import ALLOW, PARKED, HealthTracker
 from repro.core.metadata_cache import MetadataCache
 from repro.core.plan import ERROR, SKIP, SyncPlan, SyncPlanner
 from repro.core.telemetry import Telemetry
+from repro.lst.storage.base import join
 
 __all__ = ["SystemClock", "ManualClock", "DaemonCycleReport", "SyncDaemon",
            "run_daemon"]
@@ -140,6 +158,10 @@ class DaemonCycleReport:
                                    # next cycle (maxUnitsPerCycle)
     workers: int = 1               # fleet width this cycle (1 = serial path)
     steals: int = 0                # cells drained off their home shard
+    breaker_open: int = 0          # skipped: circuit breaker open (cooling)
+    quarantined: int = 0           # skipped: quarantined (given up on)
+    checkpoint_gen: int | None = None  # generation saved this cycle
+    health: dict = field(default_factory=dict)  # path -> breaker state
     lag: dict = field(default_factory=dict)   # (dataset, target) -> commits
                                               # still behind after the cycle
     failures: list = field(default_factory=list)  # (dataset, phase, error)
@@ -149,9 +171,15 @@ class DaemonCycleReport:
 
     @property
     def idle(self) -> bool:
-        """Nothing to do and nothing in the way: every table quiet."""
+        """Nothing to do and nothing in the way: every table quiet.
+
+        An open (cooling-down) breaker counts as "in the way" — the table
+        will be retried — but a *quarantined* table does not: the daemon
+        has given up on it, and it must not keep an idle-bounded run
+        alive.
+        """
         return (self.changed == 0 and self.backed_off == 0
-                and self.table_errors == 0)
+                and self.table_errors == 0 and self.breaker_open == 0)
 
     @property
     def total_lag(self) -> int:
@@ -183,10 +211,14 @@ class SyncDaemon:
                  fleet: FleetOptions | None = None):
         self.config = config
         self.telemetry = telemetry or Telemetry()
-        self.fs = fs or config.build_fs(self.telemetry)
+        self.clock = clock or SystemClock()
+        # thread the injected clock into the retry layer's backoff sleeper,
+        # so a ManualClock daemon never wall-sleeps even through storage
+        # retries (a passed-in fs keeps whatever sleeper it was built with)
+        self.fs = fs or config.build_fs(self.telemetry,
+                                        sleep=self.clock.sleep)
         self.cache = cache or MetadataCache(self.fs)
         self.max_workers = max_workers
-        self.clock = clock or SystemClock()
         self.opts = config.daemon
         self.fleet_opts = fleet if fleet is not None else config.fleet
         self._fleet: SyncFleet | None = None
@@ -203,6 +235,18 @@ class SyncDaemon:
         self._watch: dict[str, _TableWatch] = {}
         self._stop_event = threading.Event()
         self._drain_on_stop = False
+        self.health: HealthTracker | None = \
+            HealthTracker(config.health) if config.health.enabled else None
+        self._ckpt: CheckpointStore | None = None
+        self._cycles_since_save = 0
+        self.restored_from_checkpoint = False
+        if config.checkpoint.enabled and \
+                (config.checkpoint.path or config.datasets):
+            path = config.checkpoint.path or \
+                join(config.datasets[0].path, "_xtable", "checkpoint")
+            self._ckpt = CheckpointStore(self.fs, path,
+                                         retain=config.checkpoint.retain)
+            self._restore_checkpoint()
 
     def _check_process_mode_fs(self) -> None:
         """Process mode ships picklable units to child processes that
@@ -238,6 +282,8 @@ class SyncDaemon:
             if self.clock.now() < w.not_before:
                 rep.backed_off += 1
                 continue
+            if not self._admit(ds, rep):
+                continue
             try:
                 # the probe doubles as this cycle's head hint: the planner's
                 # current_commit() and the index refresh consume the SAME
@@ -262,6 +308,7 @@ class SyncDaemon:
                 # pin refresh() to a past head forever
                 self._end_cycle(ds)
 
+        self._finish_cycle(rep)
         if before is not None:
             after = stats_fn().as_dict()
             rep.storage_ops = {k: after[k] - before[k] for k in after}
@@ -379,6 +426,8 @@ class SyncDaemon:
             if now < w.not_before:
                 rep.backed_off += 1
                 continue
+            if not self._admit(ds, rep):
+                continue
             eligible.append((ds, w))
 
         # every eligible table's cycle hint must be cleared exactly once,
@@ -450,6 +499,7 @@ class SyncDaemon:
             for ds, _w in eligible:
                 end(ds)
 
+        self._finish_cycle(rep)
         if before is not None:
             after = stats_fn().as_dict()
             rep.storage_ops = {k: after[k] - before[k] for k in after}
@@ -469,6 +519,116 @@ class SyncDaemon:
         return units, planner.writers
 
     # ------------------------------------------------------------- internals
+    def _admit(self, ds: DatasetConfig, rep: DaemonCycleReport) -> bool:
+        """Circuit-breaker gate: may this table take a cycle?  An open
+        breaker skips the table entirely (not even a probe); a quarantined
+        one is parked until its (long) cooldown."""
+        if self.health is None:
+            return True
+        verdict = self.health.admit(ds.path, self.clock.now())
+        if verdict == ALLOW:
+            return True
+        if verdict == PARKED:
+            rep.quarantined += 1
+        else:
+            rep.breaker_open += 1
+        self.telemetry.bump("daemon.breaker_skips")
+        return False
+
+    def _finish_cycle(self, rep: DaemonCycleReport) -> None:
+        """End-of-cycle bookkeeping shared by the serial and fleet paths:
+        publish breaker states into the report and save a checkpoint
+        generation if this cycle changed anything."""
+        if self.health is not None:
+            rep.health = self.health.states()
+        self._maybe_checkpoint(rep)
+
+    def _maybe_checkpoint(self, rep: DaemonCycleReport) -> None:
+        if self._ckpt is None or (rep.changed == 0 and rep.table_errors == 0):
+            return              # nothing enabled / an idle cycle: no save
+        self._cycles_since_save += 1
+        if self._cycles_since_save < self.config.checkpoint.interval_cycles:
+            return
+        try:
+            rep.checkpoint_gen = self._ckpt.save(self._capture_checkpoint())
+            self._cycles_since_save = 0
+            self.telemetry.bump("daemon.checkpoints")
+        except Exception as e:
+            # the checkpoint is advisory: a failed save costs the NEXT
+            # restart some warmth, never this daemon its cycle
+            self.telemetry.bump("daemon.checkpoint_errors")
+            self.telemetry.record("daemon", "*", "checkpoint_error", str(e))
+
+    def _capture_checkpoint(self) -> dict:
+        """One JSON-ready document of everything a restart can reuse."""
+        ck = self.config.checkpoint
+        tables = {}
+        for path, w in self._watch.items():
+            idx = self.cache.peek(self.config.source_format, path)
+            seed = None
+            if idx is not None:
+                # the seed window must reach back past the laggiest
+                # target's token, or the restarted planner would go FULL
+                seed = idx.snapshot_seed(w.lag + ck.min_window)
+            tables[path] = {
+                "watch": {"token": w.token, "pending": w.pending,
+                          "lag": w.lag},
+                "seed": encode_seed(seed)}
+        payload = {"sourceFormat": self.config.source_format,
+                   "savedAt": self.clock.now(), "tables": tables}
+        if self._fleet is not None:
+            payload["rates"] = self._fleet.scheduler.rates.export()
+        if self.health is not None:
+            payload["health"] = self.health.snapshot()
+        return payload
+
+    def _restore_checkpoint(self) -> None:
+        """Seed watch state, index tails, rates and breaker states from the
+        newest readable checkpoint generation.  Everything restored here is
+        advisory — the first cycle's head probes re-verify against the live
+        tables, and a head the seeded index cannot splice to forces a
+        scoped rebuild of just that table."""
+        try:
+            loaded = self._ckpt.load()
+        except Exception:
+            loaded = None
+        if not loaded:
+            return
+        _gen, payload = loaded
+        if payload.get("sourceFormat") != self.config.source_format:
+            return      # some other pipeline's checkpoint prefix
+        try:
+            tables = payload.get("tables", {})
+            for ds in self.config.datasets:
+                t = tables.get(ds.path)
+                if not t:
+                    continue
+                wd = t.get("watch", {})
+                # backoff windows are clock-relative and the clock restarted
+                # with the process: resume with a clean slate (the breaker
+                # snapshot below carries the memory of repeated failures)
+                self._watch[ds.path] = _TableWatch(
+                    token=wd.get("token"),
+                    pending=bool(wd.get("pending", False)),
+                    lag=int(wd.get("lag", 0)))
+                seed = decode_seed(t.get("seed"))
+                if seed is not None:
+                    self.cache.index(self.config.source_format,
+                                     ds.path).restore_seed(*seed)
+            if self._fleet is not None:
+                self._fleet.scheduler.rates.restore(payload.get("rates"))
+            if self.health is not None:
+                self.health.restore(payload.get("health"))
+            self.restored_from_checkpoint = True
+            self.telemetry.bump("daemon.checkpoint_restores")
+        except Exception as e:
+            # a malformed checkpoint must degrade to a cold start, never
+            # block the daemon
+            self._watch.clear()
+            self.telemetry.bump("daemon.checkpoint_errors")
+            self.telemetry.record("daemon", "*", "checkpoint_restore_error",
+                                  str(e))
+
     def _probe(self, ds: DatasetConfig) -> str:
         """One cheap head probe, memoized on the index as the cycle's head
         hint; the index handle is cached across cycles."""
@@ -537,11 +697,15 @@ class SyncDaemon:
             # retry exhaustion, and hot-looping on them helps nobody
             w.pending = True
             self._backoff(ds, w, rep)
+            if self.health is not None:
+                self.health.record_failure(ds.path, self.clock.now())
         else:
             w.token = token
             w.pending = pending or deferred
             w.failures = 0
             w.not_before = 0.0
+            if self.health is not None:
+                self.health.record_success(ds.path)
         w.lag = lag_left
 
     def _table_failed(self, ds: DatasetConfig, w: _TableWatch,
@@ -552,6 +716,8 @@ class SyncDaemon:
         self.telemetry.bump("daemon.table_errors")
         self.telemetry.record(ds.name, "*", "error", f"{phase}: {err}")
         self._backoff(ds, w, rep)
+        if self.health is not None:
+            self.health.record_failure(ds.path, self.clock.now())
 
     def _backoff(self, ds: DatasetConfig, w: _TableWatch,
                  rep: DaemonCycleReport) -> None:
@@ -564,7 +730,11 @@ class SyncDaemon:
                               f"attempt {w.failures}, retry in {delay:.3f}s")
 
     def _pending(self) -> bool:
-        return any(w.pending for w in self._watch.values())
+        """A quarantined table's backlog must not hold ``stop(drain=True)``
+        hostage — the daemon has explicitly given up on it."""
+        return any(w.pending and not (self.health is not None and
+                                      self.health.is_quarantined(p))
+                   for p, w in self._watch.items())
 
 
 def run_daemon(config: SyncConfig, fs=None,

@@ -104,6 +104,20 @@ class CommitRateEstimator:
             rate, last = prev
             return rate * 0.5 ** (max(now - last, 0.0) / self.half_life_s)
 
+    # ----------------------------------------------------- checkpointing
+    def export(self) -> dict:
+        """JSON-ready ``key -> [rate, observed_at]`` for the daemon
+        checkpoint (observed_at is injected-clock time)."""
+        with self._lock:
+            return {k: [r, t] for k, (r, t) in self._rates.items()}
+
+    def restore(self, rates: dict) -> None:
+        """Install checkpointed rates for tables not yet observed live
+        (fresh observations always win over the checkpoint)."""
+        with self._lock:
+            for k, v in (rates or {}).items():
+                self._rates.setdefault(k, (float(v[0]), float(v[1])))
+
 
 class LagAwareScheduler:
     """Orders sync cells most-urgent-first: urgency = backlog x commit rate.

@@ -217,6 +217,57 @@ class TableMetadataIndex:
         else:
             self._built_head = self.handle.current_version()
 
+    # ------------------------------------------------- checkpoint seeding
+    def snapshot_seed(self, window: int) -> tuple[TableState, list[CommitEntry]] | None:
+        """The warm-restart seed: the folded state at an anchor ``window``
+        commits behind the built head, plus the entries from the anchor
+        (inclusive) to the head.
+
+        ``restore_seed`` on a fresh index re-installs exactly this — enough
+        for a restarted daemon to serve ``state_at(head)`` with zero
+        storage reads and ``get_commits_since(token)`` for any token inside
+        the window, while the next ``refresh()`` replays only the commits
+        that landed *after* the checkpoint (O(new), never O(history)).
+        Returns ``None`` when the index was never built or holds no entries
+        (a cold build on an empty table is already cheap).
+        """
+        with self._lock:
+            if self._built_head is None or not self._order:
+                return None
+            k = len(self._order) - min(len(self._order), max(1, window))
+            anchor = self._order[k]
+            # RLock: state_at's fold happens under this same lock, and the
+            # anchor is indexed, so this triggers no storage requests
+            base = self.state_at(anchor)
+            entries = [self._entries[v] for v in self._order[k:]]
+            return base, entries
+
+    def restore_seed(self, base: TableState,
+                     entries: list[CommitEntry]) -> bool:
+        """Seed a fresh index from a checkpoint (inverse of
+        ``snapshot_seed``); refuses on a live index — real replays win.
+
+        ``base`` is the state AT ``entries[0]``'s commit, so the fold in
+        ``state_at`` re-applies that entry onto its own resulting state —
+        idempotent (adds re-assign the same file by path, removes pop
+        already-absent keys).  The seed is advisory: the next ``refresh()``
+        replays the tail since the seeded head against the LIVE table, and
+        a head the log no longer reaches from our anchor (vacuumed /
+        divergent rewrite / behind the anchor) falls back to a full
+        rebuild — a stale checkpoint can cost a rebuild, never a wrong
+        splice.
+        """
+        with self._lock:
+            if self._built_head is not None or not entries:
+                return False
+            self._base = base
+            self._order = [e.version for e in entries]
+            self._entries = {e.version: e for e in entries}
+            self._state_memo = {}
+            self._built_head = entries[-1].version
+            self._built_token = None
+            return True
+
     # -------------------------------------------------------------- queries
     def versions(self) -> list[str]:
         self.refresh()

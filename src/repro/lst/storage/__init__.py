@@ -19,7 +19,7 @@ The storage subsystem behind every LST handle (ROADMAP "Storage backends"):
 """
 
 from repro.lst.storage.base import (FileSystem, PutIfAbsentError,
-                                    SequentialBatchMixin,
+                                    SequentialBatchMixin, SimulatedCrash,
                                     StorageRetryExhausted,
                                     TransientStorageError, fetch_many,
                                     fetch_many_ranges, flush_many, join,
@@ -32,11 +32,13 @@ from repro.lst.storage.registry import (clear_shared_stores, layer_fs,
                                         resolve_uri, scheme_of, shared_store,
                                         split_uri)
 from repro.lst.storage.retry import RetryingFS, RetryPolicy
-from repro.lst.storage.simulated import SimulatedObjectStore, StorageProfile
+from repro.lst.storage.simulated import (CrashSchedule, SimulatedObjectStore,
+                                         StorageProfile)
 
 __all__ = [
     "FileSystem", "PutIfAbsentError", "TransientStorageError",
-    "StorageRetryExhausted", "SequentialBatchMixin", "fetch_many",
+    "StorageRetryExhausted", "SimulatedCrash", "CrashSchedule",
+    "SequentialBatchMixin", "fetch_many",
     "fetch_many_ranges", "flush_many", "join", "latency_bound", "LocalFS",
     "MemoryFS",
     "SimulatedObjectStore", "StorageProfile", "RetryingFS", "RetryPolicy",

@@ -45,6 +45,20 @@ class StorageRetryExhausted(IOError):
     """A transiently-failing request did not succeed within the policy."""
 
 
+class SimulatedCrash(BaseException):
+    """Process death injected by a chaos :class:`~repro.lst.storage
+    .simulated.CrashSchedule` — the request (and every request after it)
+    dies because *the caller's process* died, not because the store
+    hiccuped.
+
+    Deliberately NOT a :class:`TransientStorageError` (retry layers must
+    not absorb it) and not even an :class:`Exception` (per-unit / per-table
+    error isolation must not contain it): a crash rips straight through
+    executor and daemon like ``SIGKILL`` would, which is exactly what the
+    crash-recovery tests are simulating.
+    """
+
+
 @runtime_checkable
 class FileSystem(Protocol):
     def read_bytes(self, path: str) -> bytes: ...

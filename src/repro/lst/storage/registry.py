@@ -110,19 +110,22 @@ def make_fs(uri: str, **options) -> FileSystem:
 
 def layer_fs(base: FileSystem, *, profile: StorageProfile | None = None,
              retry: RetryPolicy | None = None,
-             telemetry=None) -> InstrumentedFS:
+             telemetry=None, sleep=None) -> InstrumentedFS:
     """Compose the standard stack: Instrumented(Retrying(Simulated(base))).
 
     ``profile`` wraps any backend in latency/fault injection (skip to run
     against the backend's native behavior), ``retry`` adds backoff-retried
     requests, and the instrumented layer always sits outermost so counters
-    see logical requests.
+    see logical requests.  ``sleep`` replaces the retry layer's backoff
+    sleeper (``time.sleep``) — the daemon threads its injected clock
+    through here so retry backoff never wall-sleeps under a fake clock.
     """
     fs = base
     if profile is not None:
         fs = SimulatedObjectStore(fs, profile)
     if retry is not None:
-        fs = RetryingFS(fs, retry)
+        fs = RetryingFS(fs, retry) if sleep is None \
+            else RetryingFS(fs, retry, sleep=sleep)
     return InstrumentedFS(fs, telemetry)
 
 

@@ -15,6 +15,12 @@ Decorator that makes a backing store behave like a remote object store:
   to one round trip per object — the comparison arm of
   ``bench_object_store_sync`` / ``bench_write_pipeline``.
 
+A :class:`CrashSchedule` (``arm_crash``) additionally injects deterministic
+*process death* at an exact request index — :class:`~repro.lst.storage.base
+.SimulatedCrash` rips through every retry/isolation layer like SIGKILL —
+which is what the crash-recovery chaos campaign sweeps over a drain's whole
+request stream.
+
 Fault injection is seeded and lock-protected, so a test run is
 reproducible; ``injected_faults`` / ``requests`` counters expose what the
 simulation actually did, and ``serial_rounds()`` reports how many
@@ -32,9 +38,35 @@ from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Sequence
 
-from repro.lst.storage.base import PutIfAbsentError, TransientStorageError
+from repro.lst.storage.base import (PutIfAbsentError, SimulatedCrash,
+                                    TransientStorageError)
 
 _MAX_POOL = 32
+
+
+@dataclass(frozen=True)
+class CrashSchedule:
+    """Deterministic process-death injection: die at the Nth request.
+
+    ``at_request`` is 1-based over the store's global request counter, so a
+    schedule pins the crash to one exact point of a drain's request stream —
+    sweeping N across the whole stream hits every interesting window (mid
+    ``write_many`` pipeline, between a staged flush and its commit-point
+    put, mid checkpoint save...).  Requests *after* the fatal one also die:
+    the process is gone, nothing more lands.
+
+    ``after_apply=True`` makes the fatal request a *torn write*: the PUT
+    applies in the store before the crash (the response never reaches the
+    caller) — the other half of the ambiguity a crash-safe commit protocol
+    must survive.  Non-write requests don't mutate the store, so for them
+    ``after_apply`` is indistinguishable from a pre-apply death.
+    """
+    at_request: int
+    after_apply: bool = False
+
+    def __post_init__(self):
+        if self.at_request < 1:
+            raise ValueError("at_request is 1-based and must be >= 1")
 
 
 def _raise_first(settled: list) -> list[bytes]:
@@ -69,6 +101,16 @@ class SimulatedObjectStore:
         self.injected_faults = 0
         self.batch_items = 0     # requests issued through a pipelined batch
         self.batch_rounds = 0    # sequential rounds those batches occupied
+        self.crash_schedule: CrashSchedule | None = None
+        self.crashed = False     # a schedule fired (at least once)
+
+    def arm_crash(self, schedule: CrashSchedule | None) -> None:
+        """Install (or, with ``None``, clear) a crash schedule.  The request
+        counter keeps running from where it is — arm before the work whose
+        stream the schedule indexes."""
+        with self._lock:
+            self.crash_schedule = schedule
+            self.crashed = False
 
     @property
     def latency_bound(self) -> bool:
@@ -87,14 +129,27 @@ class SimulatedObjectStore:
                 self.injected_faults += 1
             return hit
 
-    def _request(self, op: str) -> None:
-        """One round trip: pay the RTT, maybe get throttled (pre-apply)."""
+    def _request(self, op: str) -> int:
+        """One round trip: pay the RTT, maybe get throttled (pre-apply).
+        Returns this request's 1-based index in the store's stream."""
         with self._lock:
             self.requests += 1
+            n = self.requests
+            cs = self.crash_schedule
+            # the fatal PUT of an after-apply schedule passes through here
+            # and dies in write_bytes AFTER the store applied it; a fatal
+            # non-write has nothing to tear, so it dies pre-apply; every
+            # request past the fatal one dies outright — the process is gone
+            defer = cs is not None and cs.after_apply and op == "PUT"
+            if cs is not None and (n > cs.at_request or
+                                   (n == cs.at_request and not defer)):
+                self.crashed = True
+                raise SimulatedCrash(f"process died at request {n} ({op})")
         if self.profile.rtt_ms > 0:
             time.sleep(self.profile.rtt_ms / 1000.0)
         if self._roll(self.profile.fault_rate):
             raise TransientStorageError(f"503 SlowDown ({op})")
+        return n
 
     def _batch_pool(self, n: int) -> ThreadPoolExecutor:
         with self._lock:
@@ -187,8 +242,16 @@ class SimulatedObjectStore:
 
     # -- writes -----------------------------------------------------------
     def write_bytes(self, path: str, data: bytes, *, overwrite: bool = False) -> None:
-        self._request("PUT")
+        n = self._request("PUT")
         self.inner.write_bytes(path, data, overwrite=overwrite)
+        cs = self.crash_schedule
+        if cs is not None and cs.after_apply and n == cs.at_request:
+            # torn write: the object landed, the process died before the
+            # response came back
+            with self._lock:
+                self.crashed = True
+            raise SimulatedCrash(f"process died after request {n} applied "
+                                 f"(PUT {path})")
         if self._roll(self.profile.ambiguous_put_rate):
             # the write landed but the caller never hears about it
             raise TransientStorageError("timeout after apply (PUT)")

@@ -487,3 +487,34 @@ def test_fleet_scales_and_urgency_beats_fifo_at_1k_tables():
     # one un-budgeted cycle caps every hot table at maxCommitsPerSync: the
     # remaining hot lag must be identical across widths and schedulers
     assert p99_1 == p99_u == p99_f == 4
+
+
+# --------------------------------------------------------------- drain stop
+def test_fleet_stop_drain_finishes_backlog_without_losing_cells():
+    """``stop(drain=True)`` under fleet mode: a multi-cycle backlog — capped
+    by BOTH maxCommitsPerSync and a drain budget that defers cells every
+    cycle — must fully drain before the fleet stops, with no cell lost to
+    a deferral raced against the stop."""
+    raw = MemoryFS()
+    bases = [f"bkt/t{i}" for i in range(3)]
+    tables = [_mk_table(raw, b, n_commits=6) for b in bases]
+    cfg = _cfg(bases, targets=("iceberg", "hudi"), maxCommitsPerSync=1)
+    daemon = SyncDaemon(cfg, layer_fs(raw), clock=ManualClock(),
+                        fleet=FleetOptions(workers=3, max_units_per_cycle=2))
+    try:
+        rep = daemon.run_cycle()             # budget: 2 of 6 cells ran
+        assert rep.units_deferred == 4 and daemon._pending()
+        daemon.stop(drain=True)
+        reports = daemon.run()               # keeps cycling past the stop
+        assert len(reports) > 1              # ... for as long as it must
+        assert not daemon._pending()
+        assert sum(r.units_deferred for r in reports) > 0
+    finally:
+        daemon.close()
+    for b, t in zip(bases, tables):
+        head = FORMATS["delta"].open(raw, b).head()
+        src = sorted(t.read_all()["k"].tolist())
+        for fmt in ("iceberg", "hudi"):
+            assert make_target(fmt, raw, b).get_sync_token() == head
+            got = LakeTable.open(raw, b, fmt).read_all()
+            assert sorted(got["k"].tolist()) == src
