@@ -35,6 +35,12 @@ paper without numbered tables, so each benchmark pins one §3 property):
                    commits)) vs. a cold restart that rebuilds the whole
                    source index (O(history)), over a 10 ms-RTT store,
                    wall clock + storage-request census
+* read plane     — the snapshot-serving read plane: reader fleets
+                   (64/512/2048 at 10 ms RTT) conditionally reading an
+                   actively syncing table's translated view (p99 latency,
+                   snapshot hit rate, storage reqs/reader), and stats-
+                   footer scan pruning (pruned vs. full scanned bytes,
+                   cached-footer re-scan)
 """
 
 from __future__ import annotations
@@ -924,6 +930,156 @@ def bench_warm_restart(report):
            f"reqs {rq_c / max(rq_w, 1):.1f}x")
 
 
+def bench_read_plane(report):
+    """The snapshot-serving read plane under a reader fleet + scan pruning.
+
+    Fleet arms (``read_plane.readers.nN``): N conditional-GET readers poll
+    the ICEBERG view of a delta table that a daemon keeps syncing, over a
+    10 ms-RTT pipelined object store.  Each pass expires the server's TTL
+    window first, so the fleet pays the worst legal cost: one head probe
+    plus (on changed passes) ONE tail-only snapshot build, amortized over
+    all N readers.  Derived columns carry the two numbers
+    ``check_floor.py`` guards — ``hit_rate`` (fraction of reads served
+    from the not-modified path or the snapshot LRU) and
+    ``reqs_per_reader`` (storage requests per read, which must head
+    toward zero as the fleet grows).
+
+    Scan arms (``read_plane.scan.*``): a stats-poor table (footers are
+    the only pruning power) scanned with a selective predicate — full
+    bodies vs. footer-pruned vs. a re-scan over the warm footer cache,
+    with the scanned/skipped byte census.  The pruned rows are asserted
+    identical to masking the full scan.
+    """
+    from repro.core import ManualClock, ReadPlaneOptions, SyncDaemon
+    from repro.lst import chunkfile
+    from repro.lst.table import Predicate
+    from repro.serve import SnapshotServer
+
+    fleets = (16, 64) if QUICK else (64, 512, 2048)
+    rounds = 3                       # head-moved passes (+1 quiet pass)
+    history = 4 if QUICK else 8
+    appends = 2
+    rtt = 5 if QUICK else 10
+    rows = 64
+
+    raw = MemoryFS()
+    base = "bkt/readers"
+    t = LakeTable.create(raw, base, SCHEMA, "delta", PartitionSpec(["part"]),
+                         {"delta.checkpointInterval": "100000"})
+    rng = np.random.default_rng(0)
+
+    def grow(table, k):
+        for _ in range(k):
+            table.append({"k": rng.integers(0, 1 << 30, rows),
+                          "part": np.array([f"p{i % 4}" for i in range(rows)]),
+                          "val": rng.random(rows)})
+
+    grow(t, history)
+    cfg = SyncConfig.from_dict({
+        "sourceFormat": "DELTA", "targetFormats": ["ICEBERG"],
+        "datasets": [{"tableBasePath": base}]})
+
+    for n in fleets:
+        arm_raw = raw.clone()
+        writer = LakeTable.open(arm_raw, base, "delta")  # RTT-free producer
+        fs = layer_fs(arm_raw,
+                      profile=StorageProfile(rtt_ms=rtt, pipeline_depth=16),
+                      retry=RetryPolicy())
+        clock = ManualClock()
+        cache = MetadataCache(fs)
+        server = SnapshotServer(fs, options=ReadPlaneOptions(ttl_ms=1000.0),
+                                cache=cache, clock=clock)
+        daemon = SyncDaemon(cfg, fs, cache=cache, clock=clock)
+        daemon.run_cycle()                   # bootstrap the iceberg view
+        tokens: list = [None] * n
+        lat: list = []
+        reader_reqs = 0
+        read_wall = 0.0
+        passes = 0
+
+        def reader_pass():
+            nonlocal reader_reqs, read_wall, passes
+            clock.advance(2.0)               # expire the TTL window
+            before = fs.stats().requests
+            p0 = time.perf_counter()
+            for i in range(n):
+                r0 = time.perf_counter()
+                res = server.read(base, "iceberg", if_token=tokens[i])
+                lat.append(time.perf_counter() - r0)
+                if res.snapshot is not None:
+                    tokens[i] = res.token
+            read_wall += time.perf_counter() - p0
+            reader_reqs += fs.stats().requests - before
+            passes += 1
+
+        for _ in range(rounds):              # the table changes every pass
+            grow(writer, appends)
+            daemon.run_cycle()
+            reader_pass()
+        reader_pass()                        # quiet pass: nothing changed
+        daemon.close()
+        lat.sort()
+        p99 = lat[min(len(lat) - 1, round(0.99 * (len(lat) - 1)))]
+        total = n * passes
+        report(f"read_plane.readers.n{n}", read_wall / total * 1e6,
+               f"fleet={n} passes={passes} rtt={rtt}ms "
+               f"p99={p99 * 1e3:.2f}ms hit_rate={server.stats.hit_rate:.3f} "
+               f"reqs_per_reader={reader_reqs / total:.3f}")
+
+    # ---- scan arms: stats-footer pushdown over the same RTT store ------
+    n_chunks = 8 if QUICK else 24
+    rows_c = 256
+    scan_raw = MemoryFS()
+    sbase = "bkt/scan"
+    st = LakeTable.create(scan_raw, sbase, SCHEMA, "delta")
+    metas = []
+    for c in range(n_chunks):               # disjoint k bands per chunk
+        lo = c * 10_000
+        m = chunkfile.write_chunk(
+            scan_raw, sbase, f"data/part-{c:03d}.chunk",
+            {"k": np.arange(lo, lo + rows_c),
+             "part": np.array([f"p{i % 4}" for i in range(rows_c)]),
+             "val": rng.random(rows_c)})
+        # strip metadata-layer stats: the footer is the only pruning power
+        metas.append(chunkfile.DataFileMeta(
+            path=m.path, size_bytes=m.size_bytes,
+            record_count=m.record_count, column_stats={}))
+    st.handle.commit(metas, [])
+
+    sfs = layer_fs(scan_raw.clone(),
+                   profile=StorageProfile(rtt_ms=rtt, pipeline_depth=16),
+                   retry=RetryPolicy())
+    server = SnapshotServer(sfs)
+    snap = server.read(sbase, "delta").snapshot
+    pred = (Predicate("k", ">=", (n_chunks - 1) * 10_000),)  # 1 chunk left
+
+    t0 = time.perf_counter()
+    full = server.scan_snapshot(snap)        # no pushdown: every body
+    dt_full = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    pruned = server.scan_snapshot(snap, pred)
+    dt_pruned = time.perf_counter() - t0
+    before = sfs.stats().requests
+    t0 = time.perf_counter()
+    again = server.scan_snapshot(snap, pred)  # footers already cached
+    dt_cached = time.perf_counter() - t0
+    rq_cached = sfs.stats().requests - before
+
+    expect = full.rows["k"][full.rows["k"] >= pred[0].value]
+    assert np.array_equal(pruned.rows["k"], expect)
+    assert np.array_equal(again.rows["k"], expect)
+    report("read_plane.scan.full", dt_full * 1e6,
+           f"chunks={n_chunks} bytes={full.bytes_scanned} rtt={rtt}ms "
+           f"(no pushdown: every body fetched)")
+    report("read_plane.scan.pruned", dt_pruned * 1e6,
+           f"scanned={pruned.files_scanned}/{n_chunks} "
+           f"bytes={pruned.bytes_scanned} saved={pruned.bytes_skipped} "
+           f"(cold footers, rows identical)")
+    report("read_plane.scan.cached", dt_cached * 1e6,
+           f"reqs={rq_cached} hits={server.stats_cache.hits} "
+           f"(warm footer cache: body fetch only)")
+
+
 def layer_puts(fs) -> int:
     return fs.stats().put
 
@@ -933,4 +1089,4 @@ ALL = [bench_low_overhead, bench_incremental_vs_full, bench_omni_matrix,
        bench_serial_vs_concurrent, bench_backlog_drain,
        bench_object_store_sync, bench_continuous_sync,
        bench_write_pipeline, bench_chunk_encode, bench_fleet,
-       bench_warm_restart]
+       bench_warm_restart, bench_read_plane]

@@ -30,6 +30,15 @@ O(new commits) while the cold one rebuilds O(history) is the whole point
 of the durable-checkpoint subsystem, and it is a counter invariant, so it
 holds on any machine at any load.
 
+*Read-plane* floors check the snapshot server's own derived counters on
+the ``read_plane.readers.n64`` row (present in both quick and full
+shapes): ``hit_rate`` must stay >= 0.9 (the fleet is served from the
+not-modified path / snapshot LRU, not per-reader replays) and
+``reqs_per_reader`` must stay <= 0.5 (storage requests amortize across
+the fleet instead of scaling with it).  Both are counter invariants —
+losing the conditional-GET or single-flight machinery makes every reader
+pay its own probe+replay, blowing through either bound on any machine.
+
 Usage: ``python benchmarks/check_floor.py NEW.json --baseline OLD.json``
 """
 
@@ -39,7 +48,8 @@ import json
 import re
 import sys
 
-GUARDED = ("drain.*.txn", "write_pipeline.*", "executor.full.*", "fleet.*")
+GUARDED = ("drain.*.txn", "write_pipeline.*", "executor.full.*", "fleet.*",
+           "read_plane.readers.*")
 # derived-metric rows (counters, not wall time) are not floor-checked
 EXCLUDE = ("write_pipeline.head_reads.*",)
 # row -> minimum value of its derived "speedup=N.NNx" column, checked on
@@ -52,6 +62,9 @@ SPEEDUP_FLOORS = {"executor.full.concurrent": 1.0}
 # well under the full run's ~4x — losing the checkpoint resume path makes
 # the two censuses EQUAL, which any floor > 1 catches.
 REQUEST_PAIR_FLOORS = {("restart.warm", "restart.cold"): 1.4}
+# read-plane row -> (minimum "hit_rate=", maximum "reqs_per_reader=") of
+# its derived column, checked on the NEW run alone (counters, load-immune)
+READ_PLANE_FLOORS = {"read_plane.readers.n64": (0.9, 0.5)}
 
 
 def load_rows(path: str) -> dict:
@@ -74,6 +87,11 @@ def parse_speedup(derived: str) -> float | None:
 def parse_reqs(derived: str) -> int | None:
     m = re.search(r"reqs=([0-9]+)\b", derived)
     return int(m.group(1)) if m else None
+
+
+def parse_named_float(derived: str, key: str) -> float | None:
+    m = re.search(rf"{key}=([0-9.]+)\b", derived)
+    return float(m.group(1)) if m else None
 
 
 def main(argv=None) -> None:
@@ -131,6 +149,25 @@ def main(argv=None) -> None:
               f"({ratio:.2f}x, floor {floor:.2f}x)")
         if ratio < floor:
             failures.append(f"{cheap}/{dear}")
+
+    for name, (hit_floor, rpr_ceiling) in sorted(READ_PLANE_FLOORS.items()):
+        if name not in new:
+            continue
+        checked += 1
+        hit = parse_named_float(new[name][1], "hit_rate")
+        rpr = parse_named_float(new[name][1], "reqs_per_reader")
+        if hit is None or rpr is None:
+            print(f"FAIL {name}: no hit_rate=/reqs_per_reader= in derived "
+                  f"column ({new[name][1]!r})")
+            failures.append(name)
+            continue
+        bad = hit < hit_floor or rpr > rpr_ceiling
+        status = "FAIL" if bad else "ok"
+        print(f"{status:4s} {name}: hit_rate={hit:.3f} (floor "
+              f"{hit_floor:.2f}) reqs_per_reader={rpr:.3f} "
+              f"(ceiling {rpr_ceiling:.2f})")
+        if bad:
+            failures.append(name)
 
     if checked == 0:
         print("# perf floor: no guarded rows matched between "

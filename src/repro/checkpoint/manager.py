@@ -182,16 +182,20 @@ class LSTCheckpointManager:
         return out
 
     def restore(self, step: int | None = None, *, fmt: str | None = None,
-                validate: bool = True) -> tuple[int, dict]:
+                validate: bool = True, state=None) -> tuple[int, dict]:
         """Reassemble a checkpoint pytree (as a flat {leaf-path: ndarray}).
 
         ``fmt`` may be any synced format — restoring through a different
         format than was written is the XTable round-trip, exercised by the
         integration tests. Elastic resharding happens on the caller side via
         ``jax.device_put`` with the new mesh's shardings.
+
+        ``state`` restores through a pre-resolved ``TableState`` (a read
+        plane's pinned snapshot) instead of replaying the format's
+        metadata here — the restore then spends storage requests only on
+        the chunk bodies.
         """
-        handle = self._reader(fmt)
-        st = handle.snapshot()
+        st = state if state is not None else self._reader(fmt).snapshot()
         steps = sorted({int(f.partition_values["step"])
                         for f in st.files.values()})
         if not steps:
@@ -221,10 +225,10 @@ class LSTCheckpointManager:
         return step, out
 
     def restore_pytree(self, template, step: int | None = None,
-                       fmt: str | None = None):
+                       fmt: str | None = None, state=None):
         """Restore into the structure of ``template`` (shape-checked)."""
         import jax
-        step, flat = self.restore(step, fmt=fmt)
+        step, flat = self.restore(step, fmt=fmt, state=state)
         leaves = _leaf_paths(template)
         out = []
         for name, leaf in leaves:

@@ -10,7 +10,7 @@ facade with persisted state, caching, and telemetry).
 from repro.core.checkpoint import CheckpointStore
 from repro.core.config import (CheckpointOptions, DaemonOptions,
                                DatasetConfig, FleetOptions, HealthOptions,
-                               StorageOptions, SyncConfig)
+                               ReadPlaneOptions, StorageOptions, SyncConfig)
 from repro.core.daemon import (DaemonCycleReport, ManualClock, SyncDaemon,
                                SystemClock, run_daemon)
 from repro.core.executor import SyncExecutor
@@ -28,7 +28,8 @@ from repro.core.telemetry import Telemetry
 
 __all__ = ["CheckpointOptions", "CheckpointStore", "DaemonOptions",
            "DatasetConfig", "FleetOptions", "HealthOptions",
-           "HealthTracker", "StorageOptions", "SyncConfig",
+           "HealthTracker", "ReadPlaneOptions", "StorageOptions",
+           "SyncConfig",
            "InternalDataFile", "InternalSnapshot", "InternalTable",
            "TableChange", "fold_changes", "make_source", "make_target",
            "run_sync", "SyncResult", "XTableSyncer", "Telemetry", "SyncPlan",

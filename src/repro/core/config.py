@@ -56,6 +56,12 @@ Accepts YAML text, a file path, or a plain dict.  Optional knobs:
 * ``health`` — per-table circuit breakers (see ``core/health.py``):
   ``enabled`` (default true), ``failureThreshold``, ``openCooldownMs``,
   ``halfOpenProbes``, ``quarantineAfter``, ``quarantineCooldownMs``.
+* ``readPlane`` — snapshot-serving read plane (see ``serve/read_plane.py``):
+  ``ttlMs`` (head-probe amortization window: at most one O(1) head probe
+  per table per window, shared across every reader), ``maxSnapshots``
+  (LRU bound on memoized head-keyed snapshots), ``statsCacheBytes``
+  (budget for the immutable chunk-stats footer cache behind
+  ``scan()`` predicate pushdown).
 """
 
 from __future__ import annotations
@@ -298,6 +304,39 @@ class HealthOptions:
 
 
 @dataclass(frozen=True)
+class ReadPlaneOptions:
+    """Snapshot-serving read plane knobs (the ``readPlane:`` block).
+
+    The read plane (``serve/read_plane.py``) serves immutable table
+    snapshots keyed by head token with conditional-GET semantics:
+    ``ttlMs`` bounds how stale a served token may be — within one window
+    at most ONE head probe happens per table, shared by every reader;
+    ``maxSnapshots`` bounds the LRU of memoized snapshots; and
+    ``statsCacheBytes`` budgets the chunk-stats footer cache behind
+    ``scan()``'s predicate pushdown (chunk files are write-once, so the
+    footer cache never invalidates — only evicts).
+    """
+    ttl_ms: float = 1000.0
+    max_snapshots: int = 64
+    stats_cache_bytes: int = 16 * 2**20
+
+    def __post_init__(self):
+        if self.ttl_ms < 0:
+            raise ValueError("readPlane ttlMs must be >= 0")
+        if self.max_snapshots < 1:
+            raise ValueError("readPlane maxSnapshots must be >= 1")
+        if self.stats_cache_bytes < 0:
+            raise ValueError("readPlane statsCacheBytes must be >= 0")
+
+    @staticmethod
+    def from_dict(d: dict) -> "ReadPlaneOptions":
+        return ReadPlaneOptions(
+            ttl_ms=float(d.get("ttlMs", 1000.0)),
+            max_snapshots=int(d.get("maxSnapshots", 64)),
+            stats_cache_bytes=int(d.get("statsCacheBytes", 16 * 2**20)))
+
+
+@dataclass(frozen=True)
 class SyncConfig:
     source_format: str
     target_formats: tuple
@@ -326,6 +365,8 @@ class SyncConfig:
     checkpoint: CheckpointOptions = field(default_factory=CheckpointOptions)
     # per-table circuit breakers (closed -> open -> half_open -> quarantined)
     health: HealthOptions = field(default_factory=HealthOptions)
+    # snapshot-serving read plane (memoized head-keyed snapshots)
+    read_plane: ReadPlaneOptions = field(default_factory=ReadPlaneOptions)
 
     def __post_init__(self):
         for f in (self.source_format, *self.target_formats):
@@ -361,7 +402,8 @@ class SyncConfig:
             daemon=DaemonOptions.from_dict(d.get("daemon", {})),
             fleet=FleetOptions.from_dict(d.get("fleet", {})),
             checkpoint=CheckpointOptions.from_dict(d.get("checkpoint", {})),
-            health=HealthOptions.from_dict(d.get("health", {})))
+            health=HealthOptions.from_dict(d.get("health", {})),
+            read_plane=ReadPlaneOptions.from_dict(d.get("readPlane", {})))
 
     def build_fs(self, telemetry=None, *, sleep=None):
         """Construct the storage stack this config describes.

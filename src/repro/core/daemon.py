@@ -208,7 +208,7 @@ class SyncDaemon:
                  telemetry: Telemetry | None = None,
                  cache: MetadataCache | None = None, *,
                  max_workers: int | None = None, clock=None,
-                 fleet: FleetOptions | None = None):
+                 fleet: FleetOptions | None = None, read_plane=None):
         self.config = config
         self.telemetry = telemetry or Telemetry()
         self.clock = clock or SystemClock()
@@ -230,6 +230,11 @@ class SyncDaemon:
             if self.fleet_opts.mode == "process":
                 self._check_process_mode_fs()
             self._fleet = SyncFleet(self.fleet_opts, self.clock)
+        # optional co-located SnapshotServer (serve/read_plane.py): every
+        # clean drain publishes the fresh source head token post-drain,
+        # while the cycle hint is still installed — co-located readers
+        # then skip even the per-TTL-window head probe
+        self.read_plane = read_plane
         self.cycles_run = 0
         self._rng = random.Random(self.opts.seed)
         self._watch: dict[str, _TableWatch] = {}
@@ -706,6 +711,12 @@ class SyncDaemon:
             w.not_before = 0.0
             if self.health is not None:
                 self.health.record_success(ds.path)
+            if self.read_plane is not None:
+                # the cycle hint is still installed here (_end_cycle runs
+                # after accounting), so the eager snapshot build inside
+                # publish() reuses this cycle's replay at zero requests
+                self.read_plane.publish(ds.path,
+                                        self.config.source_format, token)
         w.lag = lag_left
 
     def _table_failed(self, ds: DatasetConfig, w: _TableWatch,

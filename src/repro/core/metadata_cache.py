@@ -168,6 +168,49 @@ class TableMetadataIndex:
             self._built_head = head
             return self
 
+    def refresh_to(self, token: str, state=None) -> "TableMetadataIndex":
+        """Single-flight refresh against an already-probed head ``token``.
+
+        The read plane's building block: N concurrent readers who all saw
+        the same probed token race here, and the RLock serializes them —
+        the first one in pays the (tail-only) replay, every later one
+        finds ``_built_token == token`` and returns at ZERO storage
+        requests.  ``state`` is the probe's raw payload when the caller
+        has it (``head_probe``), letting the replay skip head rediscovery
+        exactly like the daemon's hinted refresh.
+
+        The token is left installed as the index's head hint — the probe
+        IS the head read, and the next ``refresh_to``/``refresh`` against
+        the same token stays free.  A co-located daemon is unaffected:
+        its own ``probe()`` overwrites the hint at cycle start and
+        ``end_cycle()`` clears it.
+        """
+        with self._lock:
+            if self._built_token == token:
+                return self
+            if state is None and self._hint_token == token:
+                # keep the probe's memoized raw payload — a bare token
+                # must not downgrade a richer hint for the same head
+                state = self._hint_state
+            self._hint_token, self._hint_state = token, state
+            return self._refresh_hinted(token, state)
+
+    def pinned_state(self) -> tuple[str, TableState]:
+        """``(built_head, state_at(built_head))`` as one atomic pair.
+
+        The snapshot-pinning read: the state is materialized from the
+        index's memo under the lock (zero storage requests once built),
+        and the returned ``TableState`` is immutable by construction —
+        later refreshes append new entries and memoize new states, they
+        never mutate one already handed out.
+        """
+        with self._lock:
+            self.ensure_built()
+            head = self._built_head
+            if head is None:
+                raise FileNotFoundError("table has no commits to pin")
+            return head, self.state_at(head)
+
     def _refresh_hinted(self, token: str, state) -> "TableMetadataIndex":
         """Refresh against a probed head: the probe IS the head read."""
         if self._built_head is None:

@@ -31,7 +31,9 @@ metadata-only translation carry pruning power across formats.
 from __future__ import annotations
 
 import struct
+import threading
 import zlib
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Mapping
 
@@ -264,6 +266,22 @@ def read_chunk(fs, base_path: str, rel_path: str) -> tuple[dict, dict]:
     return cols, body.get("extra", {})
 
 
+def read_chunks(fs, base_path: str,
+                rel_paths: list[str]) -> list[tuple[dict, dict]]:
+    """Batched ``read_chunk``: all surviving bodies fetched in ONE
+    pipelined ``read_many`` round instead of a round trip per file — the
+    read plane's scan path is RTT-bound exactly like the write path was."""
+    from repro.lst.storage.base import fetch_many
+
+    blobs = fetch_many(fs, [f"{base_path}/{p}" for p in rel_paths])
+    out = []
+    for blob in blobs:
+        body, _ = _unpack(blob)
+        out.append(({d["name"]: _decode_array(d, body["columns"][d["name"]])
+                     for d in body["schema"]}, body.get("extra", {})))
+    return out
+
+
 def read_chunks_stats(fs, base_path: str,
                       rel_paths: list[str]) -> list[tuple[int, dict]]:
     """Batched ``read_chunk_stats`` over many files: two pipelined rounds of
@@ -316,3 +334,108 @@ def read_chunk_stats(fs, base_path: str, rel_path: str) -> tuple[int, dict]:
         strict_map_key=False)
     return footer["nrows"], {k: ColumnStats.from_dict(v)
                              for k, v in footer["stats"].items()}
+
+
+def stats_refute(stats: Mapping[str, ColumnStats], column: str, op: str,
+                 value) -> bool:
+    """True only when the footer stats PROVE no row of the chunk matches
+    ``column <op> value`` — the predicate-pushdown primitive behind the
+    read plane's pruned ``scan()``.
+
+    Strictly conservative: a column with no stats entry, a None min/max
+    (all-NaN or non-comparable dtype), an unknown op, or a type-mismatched
+    comparison all answer False (keep the chunk).  NaN rows never satisfy
+    a comparison predicate, and min/max are computed over the non-NaN
+    values, so refuting by min/max stays sound for float columns with any
+    ``nan_count``.
+    """
+    st = stats.get(column)
+    if st is None or st.min is None or st.max is None:
+        return False
+    try:
+        if op == "==":
+            return bool(value < st.min or value > st.max)
+        if op == "<":
+            return bool(st.min >= value)
+        if op == "<=":
+            return bool(st.min > value)
+        if op == ">":
+            return bool(st.max <= value)
+        if op == ">=":
+            return bool(st.max < value)
+    except TypeError:
+        return False
+    return False
+
+
+def _stats_cost(stats: Mapping[str, ColumnStats], path: str) -> int:
+    """Approximate retained bytes of one cached footer entry."""
+    cost = 96 + len(path)
+    for name, st in stats.items():
+        cost += 64 + len(name)
+        for v in (st.min, st.max):
+            cost += len(v) * 4 if isinstance(v, str) else 8
+    return cost
+
+
+class ChunkStatsCache:
+    """Byte-budgeted LRU of chunk stats footers, keyed by full chunk path.
+
+    Chunk files are write-once and uniquely named, so a cached footer is
+    valid forever — the cache only ever *evicts* (over budget), never
+    invalidates.  ``get_many`` serves hits from memory and fetches all
+    misses through :func:`read_chunks_stats`'s two pipelined ranged-read
+    rounds, so a scan over N files costs at most 2 batch round trips on
+    its first pass and ZERO footer requests on every later pass.
+
+    Thread-safe; concurrent misses on the same path may fetch twice, but
+    both fetch the same immutable bytes, so last-insert-wins is correct.
+    """
+
+    def __init__(self, max_bytes: int = 16 * 2**20):
+        self.max_bytes = int(max_bytes)
+        self._lock = threading.Lock()
+        # path -> (nrows, stats, cost); OrderedDict end = most recent
+        self._entries: OrderedDict[str, tuple[int, dict, int]] = OrderedDict()
+        self._bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def get_many(self, fs, base_path: str,
+                 rel_paths: list[str]) -> list[tuple[int, dict]]:
+        """``[(nrows, {column: ColumnStats})]`` aligned with ``rel_paths``."""
+        fulls = [f"{base_path}/{p}" for p in rel_paths]
+        out: list = [None] * len(fulls)
+        missing: list[int] = []
+        with self._lock:
+            for i, full in enumerate(fulls):
+                ent = self._entries.get(full)
+                if ent is not None:
+                    self._entries.move_to_end(full)
+                    self.hits += 1
+                    out[i] = (ent[0], ent[1])
+                else:
+                    missing.append(i)
+        if not missing:
+            return out
+        fetched = read_chunks_stats(fs, base_path,
+                                    [rel_paths[i] for i in missing])
+        with self._lock:
+            self.misses += len(missing)
+            for i, (nrows, stats) in zip(missing, fetched):
+                out[i] = (nrows, stats)
+                full = fulls[i]
+                if full not in self._entries:
+                    cost = _stats_cost(stats, full)
+                    self._entries[full] = (nrows, stats, cost)
+                    self._bytes += cost
+            while self._bytes > self.max_bytes and len(self._entries) > 1:
+                _, (_, _, cost) = self._entries.popitem(last=False)
+                self._bytes -= cost
+                self.evictions += 1
+        return out

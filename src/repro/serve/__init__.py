@@ -1,3 +1,6 @@
 from repro.serve.engine import ServeEngine
+from repro.serve.read_plane import (ReadResult, ScanResult, SnapshotServer,
+                                    TableSnapshot)
 
-__all__ = ["ServeEngine"]
+__all__ = ["ServeEngine", "SnapshotServer", "TableSnapshot", "ReadResult",
+           "ScanResult"]

@@ -42,11 +42,24 @@ class ServeEngine:
 
     @classmethod
     def from_lake(cls, model: Model, fs, ckpt_path: str, *,
-                  fmt: str = "iceberg", cache_len: int = 256) -> "ServeEngine":
-        """Restore weights through the translated ``fmt`` view."""
+                  fmt: str = "iceberg", cache_len: int = 256,
+                  read_plane=None) -> "ServeEngine":
+        """Restore weights through the translated ``fmt`` view.
+
+        With a ``read_plane`` (:class:`~repro.serve.read_plane
+        .SnapshotServer`) the checkpoint table resolves through a
+        memoized head-keyed snapshot instead of a private metadata
+        replay — a fleet of servers restoring the same checkpoint shares
+        ONE replay (single-flight) and each later restore's metadata
+        cost is a cache hit.
+        """
         mgr = LSTCheckpointManager(fs, ckpt_path, fmt=fmt, sync_targets=())
         shapes = template_shapes(model.param_template())
-        _, state = mgr.restore_pytree({"params": shapes}, fmt=fmt)
+        table_state = None
+        if read_plane is not None:
+            table_state = read_plane.read(ckpt_path, fmt).snapshot.state
+        _, state = mgr.restore_pytree({"params": shapes}, fmt=fmt,
+                                      state=table_state)
         return cls(model, jax.tree.map(jnp.asarray, state["params"]),
                    cache_len=cache_len)
 
@@ -75,6 +88,10 @@ class ServeEngine:
             for i in range(b):
                 if step < requests[i].max_new:
                     outs[i].append(int(tok[i]))
+            if step + 1 >= max_new:
+                # every request has its tokens; the trailing decode step
+                # would be sampled and thrown away
+                break
             key, sub = jax.random.split(key)
             logits, cache = self._step(self.params, cache, tok, pos)
             tok = self._sample(logits, temperature, sub)

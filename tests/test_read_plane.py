@@ -1,0 +1,505 @@
+"""Snapshot-serving read plane: conditional-GET economics, single-flight,
+snapshot immutability, LRU bounds, and stats-footer scan pruning.
+
+The counting-FS pins here are the read-side complexity contract (ISSUE 8):
+an unchanged table costs a reader ZERO storage requests inside the probe
+window (and the window itself costs ONE probe shared across all readers);
+a changed table costs one tail-only refresh shared by every concurrent
+reader; stats pruning never changes scan results and never reads a chunk
+body its footer refutes.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (ManualClock, MetadataCache, ReadPlaneOptions,
+                        SyncConfig, SyncDaemon)
+from repro.lst import chunkfile
+from repro.lst.chunkfile import ChunkStatsCache, ColumnStats, stats_refute
+from repro.lst.schema import Field, Schema
+from repro.lst.storage import MemoryFS, layer_fs
+from repro.lst.table import LakeTable, Predicate
+from repro.serve.read_plane import NOT_MODIFIED, OK, SnapshotServer
+
+SCHEMA = Schema([Field("k", "int64"), Field("v", "float64"),
+                 Field("s", "string")])
+
+
+def _mk_table(fs, base, fmt="delta", n_commits=3, rows=20, seed=0):
+    """Each commit's ``k`` lives in a disjoint [c*1000, c*1000+rows) band,
+    so value predicates are selective per chunk."""
+    t = LakeTable.create(fs, base, SCHEMA, fmt)
+    rng = np.random.default_rng(seed)
+    for c in range(n_commits):
+        t.append({"k": np.arange(c * 1000, c * 1000 + rows),
+                  "v": rng.normal(size=rows),
+                  "s": np.array([f"s{c:02d}_{i:03d}" for i in range(rows)])})
+    return t
+
+
+def _server(raw, ttl_ms=1000.0, **opts):
+    fs = layer_fs(raw)
+    clock = ManualClock()
+    server = SnapshotServer(
+        fs, options=ReadPlaneOptions(ttl_ms=ttl_ms, **opts),
+        cache=MetadataCache(fs), clock=clock)
+    return server, fs, clock
+
+
+def _cfg(base, src="delta", targets=("iceberg",)):
+    return SyncConfig.from_dict({
+        "sourceFormat": src.upper(),
+        "targetFormats": [t.upper() for t in targets],
+        "datasets": [{"tableBasePath": base}]})
+
+
+# ------------------------------------------------------------ config block
+def test_read_plane_config_parses():
+    cfg = SyncConfig.from_dict({
+        "sourceFormat": "DELTA", "targetFormats": ["ICEBERG"],
+        "datasets": [{"tableBasePath": "bkt/t"}],
+        "readPlane": {"ttlMs": 250, "maxSnapshots": 8,
+                      "statsCacheBytes": 4096}})
+    assert cfg.read_plane.ttl_ms == 250.0
+    assert cfg.read_plane.max_snapshots == 8
+    assert cfg.read_plane.stats_cache_bytes == 4096
+    # defaults
+    assert _cfg("bkt/t").read_plane == ReadPlaneOptions()
+
+
+@pytest.mark.parametrize("bad", [{"ttlMs": -1}, {"maxSnapshots": 0},
+                                 {"statsCacheBytes": -5}])
+def test_read_plane_config_validates(bad):
+    with pytest.raises(ValueError):
+        ReadPlaneOptions.from_dict(bad)
+
+
+# ------------------------------------------------- conditional-GET economics
+def test_unchanged_read_is_zero_requests_inside_probe_window():
+    raw = MemoryFS()
+    _mk_table(raw, "bkt/t")
+    server, fs, clock = _server(raw, ttl_ms=1000.0)
+
+    first = server.read("bkt/t", "delta")
+    assert first.status == OK and len(first.snapshot.files) == 3
+
+    # inside the window: conditional read AND full read are both free
+    before = fs.stats().requests
+    assert server.read("bkt/t", "delta",
+                       if_token=first.token).status == NOT_MODIFIED
+    again = server.read("bkt/t", "delta")
+    assert again.snapshot is first.snapshot      # memoized, not rebuilt
+    assert fs.stats().requests == before         # ZERO storage requests
+
+    # past the window: exactly ONE probe, still no replay/snapshot work
+    clock.advance(2.0)
+    before = fs.stats().requests
+    res = server.read("bkt/t", "delta", if_token=first.token)
+    assert res.status == NOT_MODIFIED
+    assert fs.stats().requests - before == 1     # the head probe, nothing else
+
+
+def test_probe_is_shared_across_readers_per_window():
+    raw = MemoryFS()
+    _mk_table(raw, "bkt/t")
+    server, fs, clock = _server(raw, ttl_ms=1000.0)
+    tok = server.read("bkt/t", "delta").token
+
+    clock.advance(2.0)                           # expire the window
+    before = fs.stats().requests
+    done = threading.Barrier(8)
+
+    def reader():
+        done.wait()
+        for _ in range(5):
+            assert server.read("bkt/t", "delta",
+                               if_token=tok).status == NOT_MODIFIED
+
+    threads = [threading.Thread(target=reader) for _ in range(8)]
+    [t.start() for t in threads]
+    [t.join() for t in threads]
+    # 40 reads across 8 threads -> ONE probe for the whole window
+    assert fs.stats().requests - before == 1
+    assert server.stats.not_modified == 40
+
+
+def test_concurrent_cold_readers_single_flight_one_replay():
+    raw = MemoryFS()
+    _mk_table(raw, "bkt/t", n_commits=4)
+    server, fs, _clock = _server(raw)
+    start = threading.Barrier(8)
+    snaps = []
+
+    def reader():
+        start.wait()
+        snaps.append(server.read("bkt/t", "delta").snapshot)
+
+    threads = [threading.Thread(target=reader) for _ in range(8)]
+    [t.start() for t in threads]
+    [t.join() for t in threads]
+
+    idx = server.cache.index("delta", "bkt/t")
+    assert idx.replays == 1                      # exactly one replay, not 8
+    assert idx.tail_replays == 0
+    assert server.stats.probes == 1
+    assert len({s.token for s in snaps}) == 1
+    assert all(len(s.files) == 4 for s in snaps)
+
+
+def test_changed_table_pays_one_shared_tail_refresh():
+    raw = MemoryFS()
+    t = _mk_table(raw, "bkt/t", n_commits=2)
+    server, fs, clock = _server(raw)
+    old = server.read("bkt/t", "delta")
+    idx = server.cache.index("delta", "bkt/t")
+    assert idx.replays == 1
+
+    t.append({"k": np.arange(9000, 9005), "v": np.zeros(5),
+              "s": np.array(["x"] * 5)})
+    clock.advance(2.0)                           # expire the window
+    start = threading.Barrier(8)
+    out = []
+
+    def reader():
+        start.wait()
+        out.append(server.read("bkt/t", "delta", if_token=old.token))
+
+    threads = [threading.Thread(target=reader) for _ in range(8)]
+    [t_.start() for t_ in threads]
+    [t_.join() for t_ in threads]
+
+    assert all(r.status == OK for r in out)      # everyone got the new head
+    assert len({r.token for r in out}) == 1
+    assert all(len(r.snapshot.files) == 3 for r in out)
+    assert idx.replays == 1                      # no full rebuild...
+    assert idx.tail_replays == 1                 # ...ONE shared tail refresh
+    assert server.stats.probes == 2              # one per window
+
+
+def test_snapshot_immutable_while_daemon_commits_mid_read():
+    raw = MemoryFS()
+    t = _mk_table(raw, "bkt/t", n_commits=2)
+    fs = layer_fs(raw)
+    clock = ManualClock()
+    cache = MetadataCache(fs)
+    server = SnapshotServer(fs, cache=cache, clock=clock)
+    daemon = SyncDaemon(_cfg("bkt/t"), fs, cache=cache, clock=clock,
+                        read_plane=server)
+    daemon.run_cycle()
+
+    pinned = server.read("bkt/t", "delta").snapshot
+    files_before = dict(pinned.files)
+    # the daemon lands two more commits while the reader holds `pinned`
+    t.append({"k": np.arange(5), "v": np.zeros(5), "s": np.array(["a"] * 5)})
+    t.append({"k": np.arange(5), "v": np.ones(5), "s": np.array(["b"] * 5)})
+    clock.advance(2.0)
+    daemon.run_cycle()
+
+    fresh = server.read("bkt/t", "delta").snapshot
+    assert len(fresh.files) == 4 and fresh.token != pinned.token
+    # the pinned snapshot did not move underneath the reader
+    assert pinned.files == files_before
+    assert len(pinned.files) == 2
+    assert pinned.head_commit != fresh.head_commit
+
+
+def test_snapshot_lru_evicts_at_max_snapshots():
+    raw = MemoryFS()
+    t = _mk_table(raw, "bkt/t", n_commits=1)
+    server, fs, clock = _server(raw, ttl_ms=0.0, max_snapshots=2)
+    tokens = [server.read("bkt/t", "delta").token]
+    for i in range(3):
+        t.append({"k": np.arange(3), "v": np.zeros(3),
+                  "s": np.array(["x"] * 3)})
+        clock.advance(1.0)
+        tokens.append(server.read("bkt/t", "delta").token)
+    assert len(set(tokens)) == 4
+    assert server.snapshot_count() == 2          # bounded by maxSnapshots
+    assert server.stats.evictions == 2
+    assert server.stats.snapshot_builds == 4
+
+
+def test_daemon_publish_makes_co_located_reads_free():
+    raw = MemoryFS()
+    t = _mk_table(raw, "bkt/t", n_commits=2)
+    fs = layer_fs(raw)
+    clock = ManualClock()
+    cache = MetadataCache(fs)
+    server = SnapshotServer(fs, cache=cache, clock=clock)
+    daemon = SyncDaemon(_cfg("bkt/t"), fs, cache=cache, clock=clock,
+                        read_plane=server)
+    daemon.run_cycle()
+    assert server.stats.published == 1
+
+    # post-drain reads of the source view: no probe, no replay, nothing
+    before = fs.stats().requests
+    res = server.read("bkt/t", "delta")
+    assert res.status == OK and len(res.snapshot.files) == 2
+    assert server.read("bkt/t", "delta",
+                       if_token=res.token).status == NOT_MODIFIED
+    assert fs.stats().requests == before
+    assert server.stats.probes == 0
+
+    # the next cycle's publish refreshes the token — readers see the new
+    # head, still without a single probe of their own
+    t.append({"k": np.arange(4), "v": np.zeros(4), "s": np.array(["y"] * 4)})
+    clock.advance(2.0)
+    daemon.run_cycle()
+    before = fs.stats().requests
+    res2 = server.read("bkt/t", "delta", if_token=res.token)
+    assert res2.status == OK and len(res2.snapshot.files) == 3
+    assert fs.stats().requests == before
+    assert server.stats.probes == 0
+
+
+# --------------------------------------------------------- stats pushdown
+def test_stats_refute_rules():
+    st = {"k": ColumnStats(10, 20, 5, 0)}
+    assert stats_refute(st, "k", "==", 9) and stats_refute(st, "k", "==", 21)
+    assert not stats_refute(st, "k", "==", 10)
+    assert stats_refute(st, "k", "<", 10)        # min >= value
+    assert not stats_refute(st, "k", "<", 11)
+    assert stats_refute(st, "k", "<=", 9)
+    assert not stats_refute(st, "k", "<=", 10)
+    assert stats_refute(st, "k", ">", 20)        # max <= value
+    assert not stats_refute(st, "k", ">", 19)
+    assert stats_refute(st, "k", ">=", 21)
+    assert not stats_refute(st, "k", ">=", 20)
+    # conservative keeps: missing column, None min/max, type mismatch
+    assert not stats_refute(st, "missing", "==", 1)
+    assert not stats_refute({"k": ColumnStats(None, None, 5, 5)},
+                            "k", "==", 1)
+    assert not stats_refute(st, "k", "==", "a string")
+    assert not stats_refute(st, "k", "!=", 1)    # unknown op
+
+
+class _BodyCountingFS(MemoryFS):
+    """Counts full-object chunk reads (bodies); ranged footer reads pass
+    through uncounted — exactly the split the pruning invariant is about.
+    (MemoryFS serves ranged reads through ``read_bytes``, so counting is
+    suppressed while a ranged call is on the stack.)"""
+
+    def __init__(self):
+        super().__init__()
+        self.body_reads: list[str] = []
+        self._ranged = threading.local()
+
+    def read_bytes(self, path):
+        if path.endswith(".chunk") and \
+                not getattr(self._ranged, "on", False):
+            self.body_reads.append(path)
+        return super().read_bytes(path)
+
+    def read_many(self, paths):
+        if not getattr(self._ranged, "on", False):
+            self.body_reads.extend(p for p in paths
+                                   if p.endswith(".chunk"))
+        return super().read_many(paths)
+
+    def read_bytes_range(self, path, offset, length):
+        self._ranged.on = True
+        try:
+            return super().read_bytes_range(path, offset, length)
+        finally:
+            self._ranged.on = False
+
+    def read_many_ranges(self, requests):
+        self._ranged.on = True
+        try:
+            return super().read_many_ranges(requests)
+        finally:
+            self._ranged.on = False
+
+
+def _mk_stats_poor_table(fs, base, n_chunks, rows, seed):
+    """Chunks with full stats FOOTERS but metadata stripped of column
+    stats — the footer pushdown is then the only pruning power (a writer
+    or format view that carries no stats in its metadata layer)."""
+    t = LakeTable.create(fs, base, SCHEMA, "delta")
+    rng = np.random.default_rng(seed)
+    metas = []
+    for c in range(n_chunks):
+        lo = int(rng.integers(0, 500)) * 10
+        k = rng.integers(lo, lo + 200, size=rows)
+        v = rng.normal(size=rows)
+        v[rng.random(rows) < 0.2] = np.nan       # NaN rows in play
+        if c == n_chunks - 1:
+            v[:] = np.nan                        # one all-NaN chunk
+        m = chunkfile.write_chunk(
+            fs, base, f"data/part-{c:03d}.chunk",
+            {"k": k, "v": v,
+             "s": np.array([f"c{c:02d}r{i:03d}" for i in range(rows)])})
+        metas.append(chunkfile.DataFileMeta(
+            path=m.path, size_bytes=m.size_bytes,
+            record_count=m.record_count, column_stats={}))
+    t.handle.commit(metas, [])
+    return t
+
+
+def test_pruned_scan_identical_rows_and_never_reads_refuted_bodies():
+    """Seeded property sweep: random predicates over random chunk data."""
+    rng = np.random.default_rng(7)
+    for trial in range(6):
+        raw = _BodyCountingFS()
+        base = f"bkt/t{trial}"
+        _mk_stats_poor_table(raw, base, n_chunks=6, rows=25,
+                             seed=100 + trial)
+        server, fs, _clock = _server(raw)
+        snap = server.read(base, "delta").snapshot
+        footers = {
+            f.path: chunkfile.read_chunk_stats(raw, base, f.path)[1]
+            for f in snap.files.values()}
+
+        unpruned = server.scan_snapshot(snap)    # no predicates: full table
+        for _ in range(8):
+            col = ("k", "v", "s")[int(rng.integers(0, 3))]
+            op = ("==", "<", "<=", ">", ">=")[int(rng.integers(0, 5))]
+            if col == "k":
+                val = int(rng.integers(0, 5200))
+            elif col == "v":
+                val = float(rng.normal())
+            else:
+                val = f"c{int(rng.integers(0, 8)):02d}r010"
+            pred = Predicate(col, op, val)
+
+            raw.body_reads.clear()
+            res = server.scan_snapshot(snap, (pred,))
+            # (1) pruning is invisible in the rows: byte-identical to the
+            # unpruned scan filtered row-by-row
+            mask = pred.mask(unpruned.rows[col])
+            for c in unpruned.rows:
+                np.testing.assert_array_equal(res.rows.get(c, np.array([])),
+                                              unpruned.rows[c][mask])
+            # (2) no refuted chunk body was ever fetched
+            for f in snap.files.values():
+                if stats_refute(footers[f.path], col, op, val):
+                    assert f"{base}/{f.path}" not in raw.body_reads
+            # (3) the census adds up
+            assert (res.files_scanned + res.files_pruned_stats +
+                    res.files_pruned_meta) == res.files_total == 6
+
+
+def test_all_nan_and_missing_stats_chunks_are_conservatively_kept():
+    raw = _BodyCountingFS()
+    _mk_stats_poor_table(raw, "bkt/t", n_chunks=3, rows=10, seed=1)
+    server, fs, _clock = _server(raw)
+    snap = server.read("bkt/t", "delta").snapshot
+    # v > 1e12 refutes the two chunks with real v stats; the all-NaN
+    # chunk's stats are (None, None) so it MUST be conservatively read —
+    # and the row mask then drops everything (NaN never compares true)
+    res = server.scan_snapshot(snap, (Predicate("v", ">", 1e12),))
+    assert res.files_scanned == 1 and res.files_pruned_stats == 2
+    assert all(a.shape[0] == 0 for a in res.rows.values())
+    # a predicate on a column with no stats footer entry at all
+    res2 = server.scan_snapshot(snap, (Predicate("nope", ">", 0),))
+    assert res2.files_scanned == 3               # kept: nothing refutable
+    assert res2.rows["k"].shape[0] == 30         # no mask applies
+
+
+def test_footer_cache_reused_across_scans_and_byte_bounded():
+    raw = MemoryFS()
+    _mk_stats_poor_table(raw, "bkt/t", n_chunks=5, rows=10, seed=3)
+    server, fs, _clock = _server(raw)
+    pred = (Predicate("k", ">=", 10_000),)       # refutes everything
+    server.scan("bkt/t", "delta", pred)
+    assert server.stats_cache.misses == 5
+    before = fs.stats().requests
+    res = server.scan("bkt/t", "delta", pred)
+    assert fs.stats().requests == before         # footers cached, 0 requests
+    assert server.stats_cache.hits == 5
+    assert res.files_scanned == 0 and res.files_pruned_stats == 5
+
+    # a tiny budget still answers correctly, it just evicts
+    tiny = ChunkStatsCache(max_bytes=1)
+    paths = [f.path for f in
+             server.read("bkt/t", "delta").snapshot.files.values()]
+    out = tiny.get_many(raw, "bkt/t", paths)
+    assert len(out) == 5 and all(n == 10 for n, _ in out)
+    assert tiny.evictions > 0 and len(tiny) == 1
+
+
+# ------------------------------------------------ restore through a snapshot
+def test_checkpoint_restore_through_pinned_snapshot_state(fs):
+    import tempfile
+
+    from repro.checkpoint import LSTCheckpointManager
+    base = tempfile.mkdtemp() + "/ckpt"
+    mgr = LSTCheckpointManager(fs, base, fmt="hudi",
+                               sync_targets=("iceberg",))
+    tree = {"x": np.arange(12, dtype=np.float32).reshape(3, 4)}
+    mgr.save(4, tree)
+
+    server = SnapshotServer(fs)
+    snap = server.read(base, "iceberg").snapshot
+    step, flat = mgr.restore(fmt="iceberg", state=snap.state)
+    assert step == 4
+    np.testing.assert_array_equal(flat["x"], tree["x"])
+    step2, flat2 = mgr.restore(fmt="iceberg")    # un-pinned reference
+    assert step2 == step
+    np.testing.assert_array_equal(flat2["x"], flat["x"])
+
+
+# ------------------------------------------------------- serve engine fix
+def test_generate_stops_stepping_after_last_needed_token():
+    import jax
+
+    from repro.configs import smoke_config
+    from repro.models.model import Model
+    from repro.models.param import init_params
+    from repro.serve.engine import Request, ServeEngine
+
+    from dataclasses import replace
+    cfg = replace(smoke_config("yi-9b"), vocab_size=64)
+    model = Model(cfg)
+    params = init_params(model.param_template(), jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, cache_len=32)
+
+    steps = {"n": 0}
+    inner = eng._step
+
+    def counting(*a, **kw):
+        steps["n"] += 1
+        return inner(*a, **kw)
+
+    eng._step = counting
+    reqs = [Request(prompt=[1, 2, 3], max_new=5),
+            Request(prompt=[4, 5], max_new=2)]
+    outs = eng.generate(reqs, temperature=0.7, seed=3)
+    assert [len(o) for o in outs] == [5, 2]
+    # the prefill supplies token 1; steps only run while SOME request
+    # still needs a token — the old loop burned one extra trailing step
+    assert steps["n"] == 4
+
+    # outputs identical to the pre-fix loop (same RNG split sequence)
+    eng2 = ServeEngine(model, params, cache_len=32)
+    ref = _reference_generate(eng2, reqs, temperature=0.7, seed=3)
+    assert outs == ref
+
+
+def _reference_generate(eng, requests, *, temperature, seed):
+    """The pre-fix decode loop, verbatim (always runs the global max)."""
+    import jax
+    import jax.numpy as jnp
+    b = len(requests)
+    max_prompt = max(len(r.prompt) for r in requests)
+    max_new = max(r.max_new for r in requests)
+    pad = eng.model.cfg.vocab_size - 1
+    toks = np.full((b, max_prompt), pad, np.int32)
+    for i, r in enumerate(requests):
+        toks[i, -len(r.prompt):] = r.prompt
+    logits, cache = eng._prefill(eng.params, jnp.asarray(toks))
+    key = jax.random.PRNGKey(seed)
+    outs = [[] for _ in range(b)]
+    pos = jnp.full((b,), max_prompt, jnp.int32)
+    tok = eng._sample(logits, temperature, key)
+    for step in range(max_new):
+        for i in range(b):
+            if step < requests[i].max_new:
+                outs[i].append(int(tok[i]))
+        key, sub = jax.random.split(key)
+        logits, cache = eng._step(eng.params, cache, tok, pos)
+        tok = eng._sample(logits, temperature, sub)
+        pos = pos + 1
+    return outs
