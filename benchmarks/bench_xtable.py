@@ -1080,6 +1080,84 @@ def bench_read_plane(report):
            f"(warm footer cache: body fetch only)")
 
 
+def bench_catalog(report):
+    """Catalog group publish + catalog-pinned group reads.
+
+    ``catalog.publish.nN``: a daemon over N delta tables (ICEBERG target)
+    on an RTT-injected pipelined store drains one appended commit per
+    table, then group-publishes all N pointers as ONE catalog generation.
+    The derived census carries the cycle's total request cost — the
+    manifest swap itself is 1 LIST + 1 conditional PUT regardless of N
+    (view pinning rides the drain's already-installed index state).
+
+    ``catalog.read_group.warm``: a separate reader process resolving the
+    whole group at one catalog generation through the snapshot LRU — a
+    warm ``read_group`` costs exactly ONE storage request total (the
+    catalog freshness LIST), independent of group size.
+    """
+    from repro.core import ManualClock, SyncDaemon
+    from repro.lst.catalog import Catalog
+    from repro.serve import SnapshotServer
+
+    n_tables = 4 if QUICK else 16
+    rtt = 5 if QUICK else 10
+    rows = 64
+    raw = MemoryFS()
+    rng = np.random.default_rng(0)
+    bases = [f"bkt/cat{i:02d}" for i in range(n_tables)]
+    tables = []                                  # RTT-free producers
+    for b in bases:
+        t = LakeTable.create(raw, b, SCHEMA, "delta", PartitionSpec(["part"]),
+                             {"delta.checkpointInterval": "100000"})
+        t.append({"k": rng.integers(0, 1 << 30, rows),
+                  "part": np.array([f"p{i % 4}" for i in range(rows)]),
+                  "val": rng.random(rows)})
+        tables.append(t)
+
+    cfg = SyncConfig.from_dict({
+        "sourceFormat": "DELTA", "targetFormats": ["ICEBERG"],
+        "datasets": [{"tableBasePath": b} for b in bases],
+        "catalog": {"enabled": True, "group": "bench"}})
+    fs = layer_fs(raw, profile=StorageProfile(rtt_ms=rtt, pipeline_depth=16),
+                  retry=RetryPolicy())
+    clock = ManualClock()
+    daemon = SyncDaemon(cfg, fs, cache=MetadataCache(fs), clock=clock)
+    daemon.run_cycle()                           # bootstrap + generation 1
+    for t in tables:
+        t.append({"k": rng.integers(0, 1 << 30, rows),
+                  "part": np.array([f"p{i % 4}" for i in range(rows)]),
+                  "val": rng.random(rows)})
+    before = fs.stats().requests
+    t0 = time.perf_counter()
+    rep = daemon.run_cycle()                     # drain + group publish
+    dt = time.perf_counter() - t0
+    reqs = fs.stats().requests - before
+    assert rep.catalog_generation == 2
+    report(f"catalog.publish.n{n_tables}", dt * 1e6,
+           f"gen={rep.catalog_generation} "
+           f"publishes={daemon.catalog.store.publishes} "
+           f"conflicts={daemon.catalog.store.conflicts} reqs={reqs} "
+           f"rtt={rtt}ms (ONE manifest swap for {n_tables} tables)")
+    daemon.close()
+
+    rfs = layer_fs(raw.clone(),
+                   profile=StorageProfile(rtt_ms=rtt, pipeline_depth=16),
+                   retry=RetryPolicy())
+    catalog = Catalog(rfs, daemon.catalog.store.base_path)
+    server = SnapshotServer(rfs)
+    server.read_group(catalog, group="bench")    # cold: builds the snapshots
+    before = rfs.stats().requests
+    t0 = time.perf_counter()
+    group = server.read_group(catalog, group="bench")
+    dt = time.perf_counter() - t0
+    reqs = rfs.stats().requests - before
+    assert len(group) == n_tables and reqs <= 1
+    report("catalog.read_group.warm", dt * 1e6,
+           f"tables={n_tables} gen={group.generation} reqs={reqs} "
+           f"reqs_per_table={reqs / n_tables:.3f} "
+           f"(1 freshness LIST, snapshots from the LRU)")
+
+
 def layer_puts(fs) -> int:
     return fs.stats().put
 
@@ -1089,4 +1167,4 @@ ALL = [bench_low_overhead, bench_incremental_vs_full, bench_omni_matrix,
        bench_serial_vs_concurrent, bench_backlog_drain,
        bench_object_store_sync, bench_continuous_sync,
        bench_write_pipeline, bench_chunk_encode, bench_fleet,
-       bench_warm_restart, bench_read_plane]
+       bench_warm_restart, bench_read_plane, bench_catalog]

@@ -5,12 +5,20 @@ target writers around a unified internal representation, orchestrated as an
 explicit plan -> shared-metadata-cache -> concurrent-execute pipeline (see
 ``plan.py`` / ``metadata_cache.py`` / ``executor.py``; ``sync.py`` is the
 facade with persisted state, caching, and telemetry).
+
+Around that pipeline live the operational layers: the continuous-sync
+daemon and sharded fleet (``daemon.py`` / ``fleet.py``), durable warm-
+restart checkpoints (``checkpoint.py``), per-table circuit breakers
+(``health.py``), and the per-cycle atomic catalog group publish
+(``lst/catalog/``, wired through the daemon's ``catalog:`` block).
+``docs/config.md`` is the consolidated reference for every config knob.
 """
 
 from repro.core.checkpoint import CheckpointStore
-from repro.core.config import (CheckpointOptions, DaemonOptions,
-                               DatasetConfig, FleetOptions, HealthOptions,
-                               ReadPlaneOptions, StorageOptions, SyncConfig)
+from repro.core.config import (CatalogOptions, CheckpointOptions,
+                               DaemonOptions, DatasetConfig, FleetOptions,
+                               HealthOptions, ReadPlaneOptions,
+                               StorageOptions, SyncConfig)
 from repro.core.daemon import (DaemonCycleReport, ManualClock, SyncDaemon,
                                SystemClock, run_daemon)
 from repro.core.executor import SyncExecutor
@@ -26,7 +34,8 @@ from repro.core.sync import SyncResult, XTableSyncer, run_sync
 from repro.core.targets import make_target
 from repro.core.telemetry import Telemetry
 
-__all__ = ["CheckpointOptions", "CheckpointStore", "DaemonOptions",
+__all__ = ["CatalogOptions", "CheckpointOptions", "CheckpointStore",
+           "DaemonOptions",
            "DatasetConfig", "FleetOptions", "HealthOptions",
            "HealthTracker", "ReadPlaneOptions", "StorageOptions",
            "SyncConfig",

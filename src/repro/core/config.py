@@ -62,6 +62,13 @@ Accepts YAML text, a file path, or a plain dict.  Optional knobs:
   (LRU bound on memoized head-keyed snapshots), ``statsCacheBytes``
   (budget for the immutable chunk-stats footer cache behind
   ``scan()`` predicate pushdown).
+* ``catalog`` — catalog registration + atomic multi-table group publish
+  (see ``lst/catalog/``): ``enabled``, ``path``, ``group`` (the dataset
+  group this config's tables publish under), ``publishViews``
+  (``all`` | ``source``), ``retain`` (manifest generations kept).
+
+The consolidated reference for every block — defaults, camelCase keys,
+and the semantics behind each knob — is ``docs/config.md``.
 """
 
 from __future__ import annotations
@@ -337,6 +344,45 @@ class ReadPlaneOptions:
 
 
 @dataclass(frozen=True)
+class CatalogOptions:
+    """Catalog publishing knobs (the ``catalog:`` block).
+
+    With ``enabled`` the daemon registers every cleanly drained table in
+    the catalog (``lst/catalog/``) and publishes each cycle's drained
+    set as ONE atomic group commit, so cross-table readers resolving
+    through the catalog never observe a half-synced dataset.  ``group``
+    names the dataset group this config's tables publish under;
+    ``publishViews`` selects which format views get pinned head tokens
+    (``all`` also pins every target view — one O(1) probe plus a
+    tail-only index refresh per target per publish; ``source`` pins only
+    the source view at zero extra requests).  ``path`` defaults to
+    ``<parent of first dataset>/_xtable/catalog``.
+    """
+    enabled: bool = False
+    path: str | None = None
+    group: str = "default"
+    publish_views: str = "all"     # all | source
+    retain: int = 8                # manifest generations kept
+
+    def __post_init__(self):
+        if not self.group:
+            raise ValueError("catalog group must be non-empty")
+        if self.publish_views not in ("all", "source"):
+            raise ValueError("catalog publishViews must be 'all' or 'source'")
+        if self.retain < 1:
+            raise ValueError("catalog retain must be >= 1")
+
+    @staticmethod
+    def from_dict(d: dict) -> "CatalogOptions":
+        return CatalogOptions(
+            enabled=bool(d.get("enabled", False)),
+            path=d.get("path"),
+            group=str(d.get("group", "default")),
+            publish_views=str(d.get("publishViews", "all")).lower(),
+            retain=int(d.get("retain", 8)))
+
+
+@dataclass(frozen=True)
 class SyncConfig:
     source_format: str
     target_formats: tuple
@@ -367,6 +413,8 @@ class SyncConfig:
     health: HealthOptions = field(default_factory=HealthOptions)
     # snapshot-serving read plane (memoized head-keyed snapshots)
     read_plane: ReadPlaneOptions = field(default_factory=ReadPlaneOptions)
+    # catalog registration + atomic multi-table group publish
+    catalog: CatalogOptions = field(default_factory=CatalogOptions)
 
     def __post_init__(self):
         for f in (self.source_format, *self.target_formats):
@@ -403,7 +451,8 @@ class SyncConfig:
             fleet=FleetOptions.from_dict(d.get("fleet", {})),
             checkpoint=CheckpointOptions.from_dict(d.get("checkpoint", {})),
             health=HealthOptions.from_dict(d.get("health", {})),
-            read_plane=ReadPlaneOptions.from_dict(d.get("readPlane", {})))
+            read_plane=ReadPlaneOptions.from_dict(d.get("readPlane", {})),
+            catalog=CatalogOptions.from_dict(d.get("catalog", {})))
 
     def build_fs(self, telemetry=None, *, sleep=None):
         """Construct the storage stack this config describes.

@@ -39,7 +39,7 @@ commit is an atomic put-if-absent, so there is no torn state to clean up).
 pending backlog, then stops — call ``stop()`` again to give up on a
 persistently failing table and exit immediately.
 
-Robustness (both opt-in through the config):
+Robustness and publishing companions (all opt-in through the config):
 
 * **Durable checkpoints** (``checkpoint:`` block, ``core/checkpoint.py``) —
   every non-idle cycle persists the watch state, a metadata-index tail
@@ -53,6 +53,12 @@ Robustness (both opt-in through the config):
   even probed, until a cooldown), repeated opens quarantine the table;
   quarantined backlogs are excluded from ``stop(drain=True)`` so one
   poisoned table cannot hold shutdown hostage.
+* **Catalog group publish** (``catalog:`` block, ``lst/catalog/``) —
+  every cycle's cleanly drained tables register in the catalog as ONE
+  atomic generation post-drain (a *group commit*), so cross-table
+  readers pinning through the catalog
+  (``SnapshotServer.read_group``) observe either all of a cycle's
+  publish or none of it; the catalog generation rides the checkpoint.
 
 Facade: ``run_daemon(config, cycles=N)`` for scripts and operators;
 ``examples/continuous_sync.py`` drives it against an ``s3sim://`` store.
@@ -73,6 +79,7 @@ from repro.core.health import ALLOW, PARKED, HealthTracker
 from repro.core.metadata_cache import MetadataCache
 from repro.core.plan import ERROR, SKIP, SyncPlan, SyncPlanner
 from repro.core.telemetry import Telemetry
+from repro.lst.catalog import Catalog, TablePointer, ViewRef
 from repro.lst.storage.base import join
 
 __all__ = ["SystemClock", "ManualClock", "DaemonCycleReport", "SyncDaemon",
@@ -161,6 +168,9 @@ class DaemonCycleReport:
     breaker_open: int = 0          # skipped: circuit breaker open (cooling)
     quarantined: int = 0           # skipped: quarantined (given up on)
     checkpoint_gen: int | None = None  # generation saved this cycle
+    catalog_generation: int | None = None  # catalog generation this cycle's
+                                           # group publish landed (or the
+                                           # already-converged generation)
     health: dict = field(default_factory=dict)  # path -> breaker state
     lag: dict = field(default_factory=dict)   # (dataset, target) -> commits
                                               # still behind after the cycle
@@ -242,6 +252,24 @@ class SyncDaemon:
         self._drain_on_stop = False
         self.health: HealthTracker | None = \
             HealthTracker(config.health) if config.health.enabled else None
+        # optional catalog (lst/catalog/): every cycle's cleanly drained
+        # tables publish as ONE atomic group generation post-drain, so
+        # cross-table readers pinning through the catalog never observe a
+        # half-published cycle
+        self.catalog: Catalog | None = None
+        self._group_stage: set[str] = set()
+        if config.catalog.enabled and (config.catalog.path or config.datasets):
+            cat_path = config.catalog.path
+            if cat_path is None:
+                ds0 = config.datasets[0].path
+                parent = ds0.rsplit("/", 1)[0] if "/" in ds0 else ds0
+                cat_path = join(parent, "_xtable", "catalog")
+            self.catalog = Catalog(self.fs, cat_path,
+                                   retain=config.catalog.retain)
+            # stage every configured dataset up front: a restarted daemon
+            # re-resolves each table once and converges (identical pointers
+            # publish nothing) instead of leaving gaps
+            self._group_stage = {ds.path for ds in config.datasets}
         self._ckpt: CheckpointStore | None = None
         self._cycles_since_save = 0
         self.restored_from_checkpoint = False
@@ -542,10 +570,13 @@ class SyncDaemon:
 
     def _finish_cycle(self, rep: DaemonCycleReport) -> None:
         """End-of-cycle bookkeeping shared by the serial and fleet paths:
-        publish breaker states into the report and save a checkpoint
-        generation if this cycle changed anything."""
+        publish breaker states into the report, group-publish the cycle's
+        drained tables into the catalog, and save a checkpoint generation
+        if this cycle changed anything.  The catalog publish runs BEFORE
+        the checkpoint so the new generation rides the same save."""
         if self.health is not None:
             rep.health = self.health.states()
+        self._publish_catalog(rep)
         self._maybe_checkpoint(rep)
 
     def _maybe_checkpoint(self, rep: DaemonCycleReport) -> None:
@@ -563,6 +594,104 @@ class SyncDaemon:
             # restart some warmth, never this daemon its cycle
             self.telemetry.bump("daemon.checkpoint_errors")
             self.telemetry.record("daemon", "*", "checkpoint_error", str(e))
+
+    def _publish_catalog(self, rep: DaemonCycleReport) -> None:
+        """Group-publish every staged cleanly-drained table as ONE catalog
+        generation (the atomic multi-table registration of ISSUE/ROADMAP
+        open item 2).
+
+        Staged tables that are still pending, backed off, or mid-failure
+        stay staged — they join a later cycle's group instead of splitting
+        this one.  Tables whose resolved pointer matches the published one
+        are dropped from the stage without minting a generation (a
+        restarted daemon converges instead of publishing per boot).  The
+        publish is best-effort, exactly like the checkpoint: a failure
+        keeps the stage intact for the next cycle and never fails the
+        cycle that drained the data.
+        """
+        if self.catalog is None or not self._group_stage:
+            return
+        try:
+            current = self.catalog.snapshot()
+        except Exception as e:
+            self.telemetry.bump("daemon.catalog_errors")
+            self.telemetry.record("daemon", "*", "catalog_error", str(e))
+            return
+        staged: list[tuple[str, TablePointer]] = []
+        for ds in self.config.datasets:
+            if ds.path not in self._group_stage:
+                continue
+            w = self._watch.get(ds.path)
+            if w is None or w.token is None or w.pending or \
+                    self.clock.now() < w.not_before:
+                continue        # not cleanly drained yet / mid-backoff:
+                                # stays staged for a later cycle's group
+            try:
+                staged.append((ds.path, self._pointer_for(ds, w)))
+            except Exception as e:
+                self.telemetry.bump("daemon.catalog_errors")
+                self.telemetry.record(ds.name, "*", "catalog_error",
+                                      f"resolve: {e}")
+        if not staged:
+            return
+        fresh = [(p, ptr) for p, ptr in staged
+                 if current.tables.get(ptr.name) != ptr]
+        if not fresh:
+            self._group_stage.difference_update(p for p, _ in staged)
+            rep.catalog_generation = current.generation
+            return
+        try:
+            with self.catalog.transaction() as txn:
+                for _path, ptr in fresh:
+                    txn.put(ptr)
+                txn.add_to_group(self.config.catalog.group,
+                                 *[ptr.name for _path, ptr in fresh])
+            snap = txn.published
+        except Exception as e:
+            self.telemetry.bump("daemon.catalog_errors")
+            self.telemetry.record("daemon", "*", "catalog_error",
+                                  f"publish: {e}")
+            return
+        self._group_stage.difference_update(p for p, _ in staged)
+        rep.catalog_generation = snap.generation
+        self.telemetry.bump("daemon.catalog_publishes")
+        self.telemetry.record("daemon", "*", "catalog_publish",
+                              f"generation {snap.generation}: "
+                              f"{sorted(ptr.name for _p, ptr in fresh)}")
+
+    def _pointer_for(self, ds: DatasetConfig, w: _TableWatch) -> TablePointer:
+        """Resolve one cleanly drained dataset's catalog pointer.
+
+        The source view is free: after a clean drain the index was
+        refreshed against exactly ``w.token``, so ``refresh_to`` is a
+        lock-only no-op and ``pinned_state`` answers from the memo.
+        Target views (``publishViews: all``) each cost one O(1) head
+        probe plus at most a tail-only refresh — the drain itself just
+        wrote those heads, so the replay tail is the cycle's own commits.
+        """
+        src = self.config.source_format
+        views: dict[str, ViewRef] = {}
+        idx = self.cache.index(src, ds.path)
+        try:
+            idx.refresh_to(w.token)
+            head, _state = idx.pinned_state()
+        finally:
+            idx.end_cycle()
+        views[src] = ViewRef(token=w.token, commit=head)
+        if self.config.catalog.publish_views == "all":
+            for fmt in self.config.target_formats:
+                if fmt == src:
+                    continue
+                tidx = self.cache.index(fmt, ds.path)
+                try:
+                    token = tidx.probe()
+                    tidx.refresh_to(token)
+                    thead, _tstate = tidx.pinned_state()
+                finally:
+                    tidx.end_cycle()
+                views[fmt] = ViewRef(token=token, commit=thead)
+        return TablePointer(name=ds.name, base_path=ds.path,
+                            source_format=src, views=views)
 
     def _capture_checkpoint(self) -> dict:
         """One JSON-ready document of everything a restart can reuse."""
@@ -585,6 +714,9 @@ class SyncDaemon:
             payload["rates"] = self._fleet.scheduler.rates.export()
         if self.health is not None:
             payload["health"] = self.health.snapshot()
+        if self.catalog is not None:
+            payload["catalog"] = {
+                "generation": self.catalog.last_generation}
         return payload
 
     def _restore_checkpoint(self) -> None:
@@ -624,6 +756,10 @@ class SyncDaemon:
                 self._fleet.scheduler.rates.restore(payload.get("rates"))
             if self.health is not None:
                 self.health.restore(payload.get("health"))
+            cat = payload.get("catalog")
+            if cat and self.catalog is not None:
+                # advisory generation cursor — never trusted over a LIST
+                self.catalog.seed_generation(int(cat.get("generation", 0)))
             self.restored_from_checkpoint = True
             self.telemetry.bump("daemon.checkpoint_restores")
         except Exception as e:
@@ -717,6 +853,11 @@ class SyncDaemon:
                 # publish() reuses this cycle's replay at zero requests
                 self.read_plane.publish(ds.path,
                                         self.config.source_format, token)
+            if self.catalog is not None:
+                # stage for this cycle's post-drain group publish; the
+                # whole cycle's stage becomes visible as ONE catalog
+                # generation in _publish_catalog
+                self._group_stage.add(ds.path)
         w.lag = lag_left
 
     def _table_failed(self, ds: DatasetConfig, w: _TableWatch,

@@ -1,7 +1,13 @@
-"""Telemetry for the core logic (paper §3.1: "telemetry for monitoring").
+"""Telemetry for the sync stack (paper §3.1: "telemetry for monitoring").
 
-Feeds the demo's "timeline view of XTable events and the work done"
-utility: every sync phase is recorded with wall time and work counters.
+One thread-safe :class:`Telemetry` instance rides a whole run: every sync
+phase appends a timestamped :class:`Event` (dataset, target, phase, wall
+time), and named counters accumulate the work done — request/byte counts
+from the instrumented storage layer, per-subsystem occurrences from the
+daemon (checkpoint saves, breaker trips, catalog publishes/errors).  The
+daemon, fleet, executor, and benchmarks all report through it, so a
+single object answers both "what happened, in order" (the event
+timeline) and "how much did it cost" (the counters).
 """
 
 from __future__ import annotations

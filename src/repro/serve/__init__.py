@@ -1,6 +1,16 @@
+"""Read-side serving: snapshot read plane + lake-restoring serve engine.
+
+``read_plane`` is the storage-facing half — conditional-GET snapshot
+serving, stats-pushdown scans, and catalog-pinned cross-table group
+reads over the shared metadata cache.  ``engine`` is the model-facing
+half: a batched decode engine whose weights restore through any
+XTable-translated view of a lake checkpoint table, addressed by path or
+by catalog name.
+"""
+
 from repro.serve.engine import ServeEngine
-from repro.serve.read_plane import (ReadResult, ScanResult, SnapshotServer,
-                                    TableSnapshot)
+from repro.serve.read_plane import (GroupSnapshot, ReadResult, ScanResult,
+                                    SnapshotServer, TableSnapshot)
 
 __all__ = ["ServeEngine", "SnapshotServer", "TableSnapshot", "ReadResult",
-           "ScanResult"]
+           "ScanResult", "GroupSnapshot"]

@@ -1,10 +1,14 @@
 """Batched serving engine restoring weights through an XTable-translated view.
 
-Scenario 3 transplanted: the trainer commits checkpoints in Hudi-style
-metadata; the *server* opens the same directory as an Iceberg table (after
-XTable sync) because snapshot+manifest metadata with file statistics is the
-right shape for a serving fleet's scan planning. No weight files were
-copied.
+Scenario 3 transplanted: the trainer commits checkpoints in one format's
+metadata; the *server* opens the same directory through ANY translated
+view (e.g. Iceberg, whose snapshot+manifest metadata with file statistics
+is the right shape for a serving fleet's scan planning).  No weight files
+are copied.  :meth:`ServeEngine.from_lake` can restore three ways: from a
+raw base path, through the read plane's pinned snapshots
+(``read_plane=``), or by catalog NAME (``catalog=`` + ``table=``) — the
+latter pins the restore at the catalog's published (token, commit), not
+whatever head a concurrent sync may have half-landed.
 
 The engine itself: synchronous batched decode with greedy/temperature
 sampling over prefill + step functions built from the model zoo.
@@ -41,9 +45,10 @@ class ServeEngine:
         self._step = jax.jit(model.decode_step)
 
     @classmethod
-    def from_lake(cls, model: Model, fs, ckpt_path: str, *,
+    def from_lake(cls, model: Model, fs, ckpt_path: str | None = None, *,
                   fmt: str = "iceberg", cache_len: int = 256,
-                  read_plane=None) -> "ServeEngine":
+                  read_plane=None, catalog=None,
+                  table: str | None = None) -> "ServeEngine":
         """Restore weights through the translated ``fmt`` view.
 
         With a ``read_plane`` (:class:`~repro.serve.read_plane
@@ -52,12 +57,32 @@ class ServeEngine:
         replay — a fleet of servers restoring the same checkpoint shares
         ONE replay (single-flight) and each later restore's metadata
         cost is a cache hit.
+
+        With a ``catalog`` (:class:`~repro.lst.catalog.Catalog`) the
+        table is addressed by registered ``table`` *name* instead of a
+        storage path: the catalog pointer supplies the base path and the
+        published ``(token, commit)`` pin for the requested view, so the
+        restore observes exactly the atomically published head — not
+        whatever a concurrent sync has half-landed since.  (The pin
+        itself rides the read plane; a catalog without a ``read_plane``
+        still resolves the path by name but restores the live head.)
         """
+        table_state = None
+        if catalog is not None:
+            if table is None:
+                raise ValueError("catalog-based restore needs table=<name>")
+            ptr = catalog.resolve(table)
+            ckpt_path = ptr.base_path
+            ref = ptr.view(fmt)
+            if read_plane is not None:
+                table_state = read_plane.read_at(ckpt_path, fmt,
+                                                 ref.token, ref.commit).state
+        elif ckpt_path is None:
+            raise ValueError("need ckpt_path (or catalog= + table=)")
+        elif read_plane is not None:
+            table_state = read_plane.read(ckpt_path, fmt).snapshot.state
         mgr = LSTCheckpointManager(fs, ckpt_path, fmt=fmt, sync_targets=())
         shapes = template_shapes(model.param_template())
-        table_state = None
-        if read_plane is not None:
-            table_state = read_plane.read(ckpt_path, fmt).snapshot.state
         _, state = mgr.restore_pytree({"params": shapes}, fmt=fmt,
                                       state=table_state)
         return cls(model, jax.tree.map(jnp.asarray, state["params"]),

@@ -27,6 +27,17 @@ with HTTP-conditional-GET economics:
   mid-read; new heads become NEW snapshots in a ``maxSnapshots``-bounded
   LRU.
 
+Catalog-pinned reads extend the same machinery across *tables*:
+:meth:`SnapshotServer.read_group` resolves every table of a dataset at
+ONE catalog generation (``lst/catalog/``) and serves each member pinned
+at its published ``(token, commit)`` — the token is the LRU key shared
+with the conditional-GET path (a co-located daemon's eager publish means
+group members are usually already memoized), and the commit pins the
+exact published state via the index's ``state_at`` even after the table
+has moved on.  A reader joining orders against customers through a
+:class:`GroupSnapshot` can never observe tables from different publish
+generations.
+
 On top of snapshots, :meth:`SnapshotServer.scan` adds predicate pushdown
 into the chunkfile stats footers: chunks whose min/max/nan_count refute
 the predicate are pruned without touching their column data, footers are
@@ -52,7 +63,8 @@ from repro.lst.schema import TableState
 from repro.lst.table import Predicate
 
 __all__ = ["OK", "NOT_MODIFIED", "TableSnapshot", "ReadResult",
-           "ScanResult", "ReadPlaneStats", "SnapshotServer"]
+           "ScanResult", "GroupSnapshot", "ReadPlaneStats",
+           "SnapshotServer"]
 
 OK = "ok"
 NOT_MODIFIED = "not_modified"
@@ -93,6 +105,32 @@ class ReadResult:
     snapshot: TableSnapshot | None = None
 
 
+@dataclass(frozen=True)
+class GroupSnapshot:
+    """A consistent multi-table read: every member resolved at ONE
+    catalog generation.
+
+    ``generation`` is the catalog generation every member was resolved
+    from; ``snapshots`` maps table name -> pinned :class:`TableSnapshot`.
+    Like its members, a group snapshot never changes under the reader —
+    later catalog publishes produce new groups.
+    """
+    generation: int
+    snapshots: dict        # table name -> TableSnapshot
+
+    def __getitem__(self, name: str) -> TableSnapshot:
+        return self.snapshots[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.snapshots
+
+    def __len__(self) -> int:
+        return len(self.snapshots)
+
+    def table_names(self) -> list:
+        return sorted(self.snapshots)
+
+
 @dataclass
 class ScanResult:
     """Rows + the pruning census of one pushed-down scan."""
@@ -116,6 +154,7 @@ class ReadPlaneStats:
     probes: int = 0            # head probes actually issued
     published: int = 0         # tokens handed over by a co-located daemon
     evictions: int = 0         # snapshots dropped by the LRU bound
+    group_reads: int = 0       # catalog-pinned read_group() calls
     _lock: threading.Lock = field(default_factory=threading.Lock,
                                   repr=False, compare=False)
 
@@ -257,6 +296,78 @@ class SnapshotServer:
             res.rows = {c: np.concatenate([b[c] for b in batches])
                         for c in batches[0]}
         return res
+
+    # ------------------------------------------------- catalog-pinned reads
+    def read_at(self, base_path: str, fmt: str, token: str,
+                commit: str) -> TableSnapshot:
+        """Serve the snapshot pinned at a published ``(token, commit)``.
+
+        The catalog-pinned building block: ``token`` keys the same LRU
+        the conditional-GET path fills (a co-located daemon's eager
+        post-drain publish makes this a pure memo hit), and ``commit``
+        pins the exact published state through the index's ``state_at``
+        — correct even when the table has moved past the pointer, which
+        a head-chasing ``refresh_to`` would not be.  Beyond the index's
+        one-time build, a pinned read costs ZERO storage requests while
+        memoized and at most one tail refresh when not.
+        """
+        self.stats.bump("reads")
+        key = (fmt, base_path, token)
+        with self._lock:
+            snap = self._snapshots.get(key)
+            if snap is not None:
+                self._snapshots.move_to_end(key)
+                self.stats.bump("snapshot_hits")
+                return snap
+        index = self.cache.index(fmt, base_path)
+        state = index.state_at(commit)
+        snap = TableSnapshot(base_path=base_path, view_format=fmt,
+                             token=token, head_commit=commit, state=state,
+                             created_at=self._now())
+        with self._lock:
+            if key in self._snapshots:
+                self._snapshots.move_to_end(key)
+                return self._snapshots[key]
+            self._snapshots[key] = snap
+            self.stats.bump("snapshot_builds")
+            while len(self._snapshots) > self.options.max_snapshots:
+                self._snapshots.popitem(last=False)
+                self.stats.bump("evictions")
+        return snap
+
+    def read_group(self, catalog, tables=None, *, group: str | None = None,
+                   fmt: str | None = None) -> GroupSnapshot:
+        """Consistent multi-table read through a catalog (see module doc).
+
+        Resolves ONE catalog generation up front (one LIST, plus one GET
+        only when the generation moved) and serves every requested table
+        pinned at that generation's published ``(token, commit)`` — the
+        members can never mix publish generations, however many group
+        commits land while the reader iterates.
+
+        ``group`` selects a published dataset group, ``tables`` an
+        explicit name list; neither means every registered table.
+        ``fmt`` picks a specific format view (default: each table's
+        source view); a table without that published view raises
+        ``KeyError`` rather than silently serving a differently pinned
+        one.
+        """
+        cat = catalog.snapshot()
+        if group is not None:
+            names = cat.group(group)
+        elif tables is not None:
+            names = tuple(tables)
+        else:
+            names = tuple(cat.table_names())
+        snaps = {}
+        for name in names:
+            ptr = cat.resolve(name)
+            ref = ptr.view(fmt)
+            snaps[name] = self.read_at(ptr.base_path,
+                                       fmt or ptr.source_format,
+                                       ref.token, ref.commit)
+        self.stats.bump("group_reads")
+        return GroupSnapshot(generation=cat.generation, snapshots=snaps)
 
     # ---------------------------------------------------- daemon co-location
     def publish(self, base_path: str, fmt: str, token: str) -> None:

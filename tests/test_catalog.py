@@ -1,0 +1,448 @@
+"""Catalog subsystem: atomic multi-table group-commit publish.
+
+What this file pins:
+
+* ``catalog:`` config parsing (camelCase keys, defaults, validation);
+* pointer records roundtrip JSON and never silently substitute views;
+* the store's publish is ONE conditional put: racing publishers of the
+  same base generation get exactly one winner, the loser a
+  ``CatalogConflict`` — and the transaction layer rebases the loser so
+  updates to different tables interleave without loss;
+* the daemon group-publishes each cycle's drained tables as ONE catalog
+  generation, converges on restart without minting generations, and the
+  generation cursor rides the checkpoint;
+* **binary atomicity**: a crash injected at EVERY request index of a
+  3-table group publish leaves ``read_group`` observing either the full
+  previous or the full next catalog generation — byte-identical rows,
+  never a mix;
+* counting-FS census: catalog-pinned group reads cost O(1) requests per
+  table beyond the existing read-plane floors (a warm group read is ONE
+  request total — the catalog freshness LIST).
+"""
+
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import ManualClock, MetadataCache, SyncConfig, SyncDaemon
+from repro.core.config import CatalogOptions
+from repro.lst import LakeTable
+from repro.lst.catalog import (Catalog, CatalogConflict, CatalogStore,
+                               TablePointer, UnknownTableError, ViewRef,
+                               pointer_from_json, pointer_to_json)
+from repro.lst.schema import Field, PartitionSpec, Schema
+from repro.lst.storage import (CrashSchedule, MemoryFS, SimulatedCrash,
+                               SimulatedObjectStore, StorageProfile, layer_fs)
+from repro.serve import SnapshotServer
+
+SCHEMA = Schema([Field("k", "int64"), Field("part", "string")])
+
+
+def _mk_table(fs, base, fmt="delta", n_commits=3, start=0):
+    t = LakeTable.create(fs, base, SCHEMA, fmt, PartitionSpec(["part"]),
+                         {"delta.checkpointInterval": "100000"})
+    for i in range(start, start + n_commits):
+        t.append({"k": np.array([i, i + 100], np.int64),
+                  "part": np.array([f"p{i % 2}", "p0"])})
+    return t
+
+
+def _cfg(bases, *, targets=("iceberg",), **catalog_kw):
+    cat = {"enabled": True}
+    cat.update(catalog_kw)
+    return SyncConfig.from_dict({
+        "sourceFormat": "DELTA",
+        "targetFormats": [t.upper() for t in targets],
+        "datasets": [{"tableBasePath": b} for b in bases],
+        "catalog": cat,
+    })
+
+
+def _ptr(name, token="tok-1", commit="c-1", **views):
+    allv = {"delta": ViewRef(token, commit)}
+    allv.update(views)
+    return TablePointer(name=name, base_path=f"bkt/{name}",
+                        source_format="delta", views=allv)
+
+
+# ------------------------------------------------------------------- config
+def test_catalog_options_defaults_and_camelcase_keys():
+    assert SyncConfig.from_dict({
+        "sourceFormat": "DELTA", "targetFormats": ["ICEBERG"],
+        "datasets": [{"tableBasePath": "bkt/t"}]}).catalog == CatalogOptions()
+    opts = CatalogOptions.from_dict({
+        "enabled": True, "path": "bkt/cat", "group": "sales",
+        "publishViews": "source", "retain": 3})
+    assert opts == CatalogOptions(enabled=True, path="bkt/cat",
+                                  group="sales", publish_views="source",
+                                  retain=3)
+
+
+@pytest.mark.parametrize("bad", [{"publishViews": "nope"},
+                                 {"retain": 0}, {"group": ""}])
+def test_catalog_options_validate(bad):
+    with pytest.raises(ValueError):
+        CatalogOptions.from_dict(bad)
+
+
+# ----------------------------------------------------------------- pointers
+def test_pointer_roundtrips_json_and_orders_formats():
+    p = _ptr("orders", iceberg=ViewRef("tok-i", "c-i"),
+             hudi=ViewRef("tok-h", "c-h"))
+    assert pointer_from_json(json.loads(json.dumps(pointer_to_json(p)))) == p
+    assert p.formats[0] == "delta"               # source view leads
+    assert p.view().commit == "c-1"              # default = source view
+    assert p.view("iceberg").token == "tok-i"
+
+
+def test_pointer_never_substitutes_a_missing_view():
+    p = _ptr("orders")
+    with pytest.raises(KeyError, match="hudi"):
+        p.view("hudi")
+    with pytest.raises(ValueError):              # source view is mandatory
+        TablePointer(name="t", base_path="b", source_format="delta",
+                     views={"iceberg": ViewRef("t", "c")})
+
+
+# -------------------------------------------------------------------- store
+def test_store_racing_publishers_get_exactly_one_winner():
+    fs = MemoryFS()
+    a = CatalogStore(fs, "bkt/cat")
+    b = CatalogStore(fs, "bkt/cat")
+    assert a.publish({"tables": {}}, base_generation=0) == 1
+    with pytest.raises(CatalogConflict):
+        b.publish({"tables": {}}, base_generation=0)
+    assert b.conflicts == 1 and a.head_generation() == 1
+
+
+def test_store_skips_corrupt_head_and_prunes_old_generations():
+    fs = MemoryFS()
+    store = CatalogStore(fs, "bkt/cat", retain=2)
+    for g in range(4):
+        store.publish({"g": g}, base_generation=g)
+    assert store.head_generation() == 4
+    # retain=2 pruned generations 1 and 2 best-effort
+    assert store.load_generation(1) is None
+    fs.write_bytes(store._path(5), b"{ torn", overwrite=True)
+    gen, manifest = store.load()                 # corrupt head falls back
+    assert (gen, manifest["g"]) == (4, 3) and store.load_fallbacks == 1
+
+
+# ------------------------------------------------------------- transactions
+def test_group_commit_is_one_visible_unit():
+    fs = MemoryFS()
+    cat = Catalog(fs, "bkt/cat")
+    before = cat.snapshot()
+    assert before.generation == 0 and before.table_names() == []
+    with cat.transaction() as txn:
+        txn.put(_ptr("orders"))
+        txn.put(_ptr("customers"))
+        txn.set_group("sales", ["orders", "customers"])
+    after = Catalog(fs, "bkt/cat").snapshot()    # a fresh reader
+    assert after.generation == 1
+    assert after.table_names() == ["customers", "orders"]
+    assert after.group("sales") == ("orders", "customers")
+    with pytest.raises(UnknownTableError):
+        before.resolve("orders")                 # the old snapshot is immutable
+
+
+def test_drop_leaves_every_group_and_unknowns_raise():
+    fs = MemoryFS()
+    cat = Catalog(fs, "bkt/cat")
+    cat.register_table(_ptr("orders"), group="sales")
+    cat.register_table(_ptr("customers"), group="sales")
+    with cat.transaction() as txn:
+        txn.drop("orders")
+    snap = cat.snapshot()
+    assert snap.group("sales") == ("customers",)
+    with pytest.raises(UnknownTableError):
+        snap.resolve("orders")
+    with pytest.raises(UnknownTableError):
+        snap.group("nope")
+
+
+def test_losing_transaction_rebases_on_the_winner():
+    fs = MemoryFS()
+    ours, theirs = Catalog(fs, "bkt/cat"), Catalog(fs, "bkt/cat")
+    ours.snapshot()                              # both read base gen 0
+    theirs.register_table(_ptr("customers"))     # they win generation 1
+    # interleave: our commit's freshness LIST answers from BEFORE the
+    # winner's publish, exactly the stale-base window of a real race
+    real = ours.store.head_generation
+    calls = []
+    ours.store.head_generation = \
+        lambda: (calls.append(1), 0 if len(calls) == 1 else real())[1]
+    snap = ours.register_table(_ptr("orders"))   # conflict, rebase, win 2
+    assert snap.generation == 2
+    assert snap.table_names() == ["customers", "orders"]
+    assert ours.store.conflicts == 1
+
+
+def test_concurrent_transactions_all_land_without_loss():
+    fs = MemoryFS()
+    cat = Catalog(fs, "bkt/cat")
+    errors = []
+
+    def publish(i):
+        try:
+            Catalog(fs, "bkt/cat").register_table(_ptr(f"t{i}"))
+        except Exception as e:                   # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=publish, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    snap = cat.snapshot()
+    assert not errors
+    assert snap.table_names() == sorted(f"t{i}" for i in range(8))
+    assert snap.generation == 8                  # one generation per winner
+
+
+def test_empty_transaction_publishes_nothing():
+    fs = MemoryFS()
+    cat = Catalog(fs, "bkt/cat")
+    with cat.transaction():
+        pass
+    assert cat.store.head_generation() == 0 and cat.store.publishes == 0
+
+
+# ------------------------------------------------------------------- daemon
+def test_daemon_group_publishes_each_cycle_and_converges_on_restart():
+    fs = MemoryFS()
+    orders = _mk_table(fs, "bkt/orders")
+    _mk_table(fs, "bkt/customers")
+    cfg = _cfg(["bkt/orders", "bkt/customers"], group="sales")
+    d = SyncDaemon(cfg, fs, clock=ManualClock())
+    rep = d.run_cycle()
+    assert rep.catalog_generation == 1           # BOTH tables in ONE publish
+    snap = d.catalog.snapshot()
+    assert snap.group("sales") == ("orders", "customers")
+    for name in ("orders", "customers"):
+        ptr = snap.resolve(name)
+        assert ptr.formats == ("delta", "iceberg")
+
+    assert d.run_cycle().catalog_generation is None     # idle: no publish
+    orders.append({"k": np.array([999], np.int64), "part": np.array(["p0"])})
+    assert d.run_cycle().catalog_generation == 2
+
+    # a restarted daemon re-resolves everything, finds identical pointers
+    # and converges WITHOUT minting a generation per boot
+    d2 = SyncDaemon(cfg, fs, clock=ManualClock())
+    assert d2.run_cycle().catalog_generation == 2
+    assert d2.catalog.store.publishes == 0
+    assert d2.catalog.store.head_generation() == 2
+
+
+def test_daemon_publish_views_source_skips_target_views():
+    fs = MemoryFS()
+    _mk_table(fs, "bkt/orders")
+    cfg = _cfg(["bkt/orders"], publishViews="source")
+    d = SyncDaemon(cfg, fs, clock=ManualClock())
+    d.run_cycle()
+    ptr = d.catalog.resolve("orders")
+    assert ptr.formats == ("delta",)
+
+
+def test_catalog_generation_rides_the_checkpoint():
+    fs = MemoryFS()
+    _mk_table(fs, "bkt/orders")
+    cfg = SyncConfig.from_dict({
+        "sourceFormat": "DELTA", "targetFormats": ["ICEBERG"],
+        "datasets": [{"tableBasePath": "bkt/orders"}],
+        "catalog": {"enabled": True},
+        "checkpoint": {"enabled": True},
+    })
+    d = SyncDaemon(cfg, fs, clock=ManualClock())
+    rep = d.run_cycle()
+    assert rep.checkpoint_gen is not None and rep.catalog_generation == 1
+    _gen, payload = d._ckpt.load()
+    assert payload["catalog"]["generation"] == 1
+    d2 = SyncDaemon(cfg, fs, clock=ManualClock())
+    assert d2.restored_from_checkpoint
+    assert d2.catalog.store._gen_hint == 1       # advisory cursor seeded
+
+
+def test_backed_off_table_keeps_its_last_published_pointer():
+    """A table mid-backoff must not block the healthy table's group — and
+    until it drains cleanly again the catalog keeps serving its LAST
+    cleanly published pointer, never a half-synced head."""
+    fs = MemoryFS()
+    orders = _mk_table(fs, "bkt/orders")
+    customers = _mk_table(fs, "bkt/customers")
+    cfg = _cfg(["bkt/orders", "bkt/customers"], group="sales")
+    clock = ManualClock()
+    d = SyncDaemon(cfg, fs, clock=clock)
+    assert d.run_cycle().catalog_generation == 1
+    old_ref = d.catalog.resolve("customers").view()
+
+    orders.append({"k": np.array([7], np.int64), "part": np.array(["p0"])})
+    customers.append({"k": np.array([8], np.int64), "part": np.array(["p0"])})
+    # customers enters a backoff window (as a failed probe/drain would
+    # leave it): skipped this cycle, excluded from this cycle's group
+    d._watch["bkt/customers"].not_before = clock.now() + 100.0
+    rep2 = d.run_cycle()
+    assert rep2.backed_off == 1 and rep2.catalog_generation == 2
+    snap = d.catalog.snapshot()
+    assert snap.group("sales") == ("orders", "customers")   # still grouped
+    assert snap.resolve("customers").view() == old_ref      # old pointer
+    assert snap.resolve("orders").view().token != old_ref.token
+
+    clock.advance(200.0)          # window passes: customers drains and
+    rep3 = d.run_cycle()          # joins a LATER group generation
+    assert rep3.catalog_generation == 3
+    assert d.catalog.resolve("customers").view() != old_ref
+
+
+# -------------------------------------------------- read plane: group reads
+def _serving_stack(bases, **catalog_kw):
+    raw = MemoryFS()
+    tables = [_mk_table(raw, b) for b in bases]
+    fs = layer_fs(raw)
+    cfg = _cfg(bases, group="sales", **catalog_kw)
+    clock = ManualClock()
+    d = SyncDaemon(cfg, fs, clock=clock)
+    server = SnapshotServer(fs, cache=d.cache, clock=clock)
+    d.read_plane = server
+    assert d.run_cycle().catalog_generation == 1
+    return raw, fs, cfg, d, server, tables
+
+
+def test_read_group_pins_every_member_at_one_generation():
+    _raw, _fs, _cfg_, d, server, (orders, _customers) = \
+        _serving_stack(["bkt/orders", "bkt/customers"])
+    g1 = server.read_group(d.catalog, group="sales")
+    assert g1.generation == 1 and len(g1) == 2
+    rows1 = sorted(server.scan_snapshot(g1["orders"]).rows["k"].tolist())
+
+    orders.append({"k": np.array([999], np.int64), "part": np.array(["p0"])})
+    assert d.run_cycle().catalog_generation == 2
+    g2 = server.read_group(d.catalog, group="sales")
+    assert g2.generation == 2
+    assert 999 in server.scan_snapshot(g2["orders"]).rows["k"].tolist()
+    # the held group snapshot stays pinned at its OWN generation's rows
+    again = sorted(server.scan_snapshot(g1["orders"]).rows["k"].tolist())
+    assert again == rows1 and 999 not in again
+
+
+def test_read_group_by_view_format_and_unknowns():
+    _raw, _fs, _cfg_, d, server, _tables = \
+        _serving_stack(["bkt/orders", "bkt/customers"])
+    gi = server.read_group(d.catalog, group="sales", fmt="iceberg")
+    assert all(s.view_format == "iceberg" for s in gi.snapshots.values())
+    # the iceberg view serves the same rows as the source view
+    gd = server.read_group(d.catalog, tables=["orders"])
+    assert sorted(server.scan_snapshot(gi["orders"]).rows["k"].tolist()) == \
+        sorted(server.scan_snapshot(gd["orders"]).rows["k"].tolist())
+    with pytest.raises(UnknownTableError):
+        server.read_group(d.catalog, tables=["nope"])
+    with pytest.raises(KeyError):
+        _serving_stack(["bkt/solo"], publishViews="source")[4].read_group(
+            SyncDaemon(_cfg(["bkt/solo"]), _fs).catalog, fmt="hudi")
+
+
+def test_census_warm_group_read_is_one_request_total():
+    """The O(1) pin: beyond the read plane's existing floors, a warm
+    catalog-pinned group read costs exactly ONE storage request — the
+    catalog freshness LIST — and zero per table."""
+    _raw, fs, _cfg_, d, server, _tables = \
+        _serving_stack(["bkt/orders", "bkt/customers", "bkt/parts"])
+    server.read_group(d.catalog, group="sales")      # prime the memo
+    for _ in range(3):
+        before = fs.stats().requests
+        g = server.read_group(d.catalog, group="sales")
+        assert fs.stats().requests - before == 1     # catalog LIST only
+        assert len(g) == 3
+    # a COLD reader process: catalog resolution (LIST + GET) plus the
+    # normal one-replay-per-table floor, amortized across later reads
+    cold_cache = MetadataCache(fs)
+    cold_server = SnapshotServer(fs, cache=cold_cache)
+    cold_catalog = Catalog(fs, d.catalog.store.base_path)
+    cold_server.read_group(cold_catalog, group="sales")
+    before = fs.stats().requests
+    cold_server.read_group(cold_catalog, group="sales")
+    assert fs.stats().requests - before == 1
+
+
+# ------------------------------------------- chaos: binary group atomicity
+def _group_digest(fs, catalog_path, bases):
+    """(generation, rows-per-table) as one pinned read through a COLD
+    reader stack — what any external reader would observe."""
+    server = SnapshotServer(fs, cache=MetadataCache(fs))
+    group = server.read_group(Catalog(fs, catalog_path))
+    rows = {}
+    for name in group.table_names():
+        got = server.scan_snapshot(group[name]).rows
+        rows[name] = sorted(zip(got["k"].tolist(), got["part"].tolist()))
+    return group.generation, rows
+
+
+def _publish_campaign_base():
+    """Pre-crash store: 3 tables synced + group-published at generation 1,
+    then fresh commits land on ALL of them while the daemon is down."""
+    bases = ["bkt/orders", "bkt/customers", "bkt/parts"]
+    raw = MemoryFS()
+    tables = [_mk_table(raw, b, n_commits=2) for b in bases]
+    cfg = _cfg(bases, group="sales")
+    d = SyncDaemon(cfg, layer_fs(raw), clock=ManualClock())
+    assert d.run_cycle().catalog_generation == 1
+    for i, t in enumerate(tables):
+        t.append({"k": np.array([50 + i], np.int64),
+                  "part": np.array(["p1"])})
+    catalog_path = d.catalog.store.base_path
+    return raw, cfg, bases, catalog_path
+
+
+def _crash_sweep(*, after_apply):
+    base, cfg, bases, catalog_path = _publish_campaign_base()
+    serial = StorageProfile(pipeline_depth=1)
+
+    # golden arm: the same cycle, no crash -> the full next generation
+    golden = SimulatedObjectStore(base.clone(), serial)
+    d = SyncDaemon(cfg, layer_fs(golden), clock=ManualClock())
+    assert d.run_cycle().catalog_generation == 2
+    prev_digest = _group_digest(base, catalog_path, bases)
+    next_digest = _group_digest(golden.inner, catalog_path, bases)
+    assert prev_digest[0] == 1 and next_digest[0] == 2
+    assert prev_digest[1] != next_digest[1]
+    total = golden.requests
+    assert total > 30            # the sweep covers a real drain + publish
+
+    mixed_seen = 0
+    for n in range(1, total + 1):
+        sim = SimulatedObjectStore(base.clone(), serial)
+        sim.arm_crash(CrashSchedule(n, after_apply=after_apply))
+        daemon = SyncDaemon(cfg, layer_fs(sim), clock=ManualClock())
+        with pytest.raises(SimulatedCrash):
+            daemon.run_cycle()
+        assert sim.crashed, f"crash at request {n} never fired"
+        sim.arm_crash(None)
+        got = _group_digest(sim.inner, catalog_path, bases)
+        if got == prev_digest:
+            continue
+        if got == next_digest:
+            mixed_seen += 1      # fine: the publish PUT landed before n
+            continue
+        raise AssertionError(
+            f"crash at request {n} left a MIXED catalog view: "
+            f"generation {got[0]}")
+    # the torn-write arm must actually exercise the published-next case
+    if after_apply:
+        assert mixed_seen >= 1
+    return total
+
+
+def test_crash_at_every_request_index_leaves_binary_catalog_view():
+    """The acceptance gate: a crash at EVERY request index of a 3-table
+    group publish leaves ``read_group`` observing either the full
+    previous or the full next catalog generation — byte-identical rows,
+    never a mix."""
+    _crash_sweep(after_apply=False)
+
+
+@pytest.mark.slow
+def test_crash_torn_publish_put_leaves_full_next_generation():
+    _crash_sweep(after_apply=True)

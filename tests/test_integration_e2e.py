@@ -83,6 +83,38 @@ def test_serve_from_iceberg_view(world):
     assert all(0 <= t < model.cfg.vocab_size for t in outs[0])
 
 
+def test_serve_resolves_checkpoint_by_catalog_name(world):
+    """Scenario 3 through the catalog: the serving fleet addresses the
+    checkpoint table by registered NAME, and the restore pins at the
+    published (token, commit) — not whatever head a concurrent sync may
+    have half-landed."""
+    fs, root, model = world["fs"], world["root"], world["model"]
+    from repro.core import MetadataCache
+    from repro.lst.catalog import Catalog, TablePointer, ViewRef
+    from repro.serve import SnapshotServer
+
+    cache = MetadataCache(fs)
+    idx = cache.index("iceberg", f"{root}/ckpt")
+    token = idx.probe()
+    idx.refresh_to(token)
+    head, _state = idx.pinned_state()
+    idx.end_cycle()
+    catalog = Catalog(fs, f"{root}/catalog")
+    catalog.register_table(
+        TablePointer(name="yi-9b-ckpt", base_path=f"{root}/ckpt",
+                     source_format="iceberg",
+                     views={"iceberg": ViewRef(token, head)}),
+        group="serving")
+
+    eng = ServeEngine.from_lake(model, fs, fmt="iceberg", cache_len=48,
+                                read_plane=SnapshotServer(fs, cache=cache),
+                                catalog=catalog, table="yi-9b-ckpt")
+    outs = eng.generate([Request(prompt=[5, 6, 7], max_new=4)])
+    assert len(outs[0]) == 4
+    with pytest.raises(ValueError):
+        ServeEngine.from_lake(model, fs, catalog=catalog)   # needs table=
+
+
 def test_serve_greedy_deterministic(world):
     fs, root, model = world["fs"], world["root"], world["model"]
     eng = ServeEngine.from_lake(model, fs, f"{root}/ckpt", fmt="delta",
