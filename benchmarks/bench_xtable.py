@@ -38,9 +38,11 @@ paper without numbered tables, so each benchmark pins one §3 property):
 * read plane     — the snapshot-serving read plane: reader fleets
                    (64/512/2048 at 10 ms RTT) conditionally reading an
                    actively syncing table's translated view (p99 latency,
-                   snapshot hit rate, storage reqs/reader), and stats-
-                   footer scan pruning (pruned vs. full scanned bytes,
-                   cached-footer re-scan)
+                   snapshot hit rate, storage reqs/reader), stats-footer
+                   scan pruning (pruned vs. full scanned bytes, cached-
+                   footer re-scan), and CHK3 columnar projection pushdown
+                   (full vs. projected vs. late-materialized scans of a
+                   16-column table: fetched-byte census)
 """
 
 from __future__ import annotations
@@ -949,6 +951,13 @@ def bench_read_plane(report):
     bodies vs. footer-pruned vs. a re-scan over the warm footer cache,
     with the scanned/skipped byte census.  The pruned rows are asserted
     identical to masking the full scan.
+
+    Projection arms (``read_plane.scan.wide_full`` / ``.projected`` /
+    ``.late``): a 16-column table scanned in full vs. projecting 2
+    columns through the CHK3 column-offset index vs. a late-materialized
+    predicate + projection where only one chunk's data contains the probe
+    value — the byte census ``check_floor.py`` gates (projected bytes
+    must stay >= 3x under full bytes).
     """
     from repro.core import ManualClock, ReadPlaneOptions, SyncDaemon
     from repro.lst import chunkfile
@@ -1078,6 +1087,65 @@ def bench_read_plane(report):
     report("read_plane.scan.cached", dt_cached * 1e6,
            f"reqs={rq_cached} hits={server.stats_cache.hits} "
            f"(warm footer cache: body fetch only)")
+
+    # ---- projection arms: CHK3 column pushdown over a WIDE table -------
+    # 16 equal-width columns; a query touching 3 of them (1 predicate + 2
+    # projected) should move ~3/16 of the body bytes.  The late arm's
+    # chunks all pass the stats check for the probe value (overlapping
+    # ranges) but only one chunk's DATA contains it — phase 1 fetches one
+    # column everywhere, phase 2 only the surviving chunk's projection.
+    wcols = 16
+    w_chunks = 4 if QUICK else 8
+    wrows = 256
+    wide_raw = MemoryFS()
+    wbase = "bkt/wide"
+    wschema = Schema([Field(f"c{i:02d}", "float64" if i % 2 == 0
+                            else "int64") for i in range(wcols)])
+    wt = LakeTable.create(wide_raw, wbase, wschema, "delta")
+    for c in range(w_chunks):
+        data = {f"c{i:02d}": (rng.random(wrows) if i % 2 == 0 else
+                              rng.integers(0, wrows, wrows) * 2)
+                for i in range(wcols)}
+        if c == 0:                            # the only odd-valued chunk
+            data["c01"] = np.arange(wrows) * 2 + 1
+        wt.append(data)
+
+    wfs = layer_fs(wide_raw.clone(),
+                   profile=StorageProfile(rtt_ms=rtt, pipeline_depth=16),
+                   retry=RetryPolicy())
+    wserver = SnapshotServer(wfs)
+    wsnap = wserver.read(wbase, "delta").snapshot
+
+    t0 = time.perf_counter()
+    wfull = wserver.scan_snapshot(wsnap)      # all 16 columns, full bodies
+    dt_wfull = time.perf_counter() - t0
+    before = wfs.stats().requests
+    t0 = time.perf_counter()
+    wproj = wserver.scan_snapshot(wsnap, columns=["c02", "c03"])
+    dt_wproj = time.perf_counter() - t0
+    rq_wproj = wfs.stats().requests - before
+    probe = 51                                # odd: only chunk 0's data has it
+    wpred = (Predicate("c01", "==", probe),)
+    before = wfs.stats().requests
+    t0 = time.perf_counter()
+    wlate = wserver.scan_snapshot(wsnap, wpred, columns=["c02", "c03"])
+    dt_wlate = time.perf_counter() - t0
+    rq_wlate = wfs.stats().requests - before
+
+    for c in ("c02", "c03"):                  # byte-identical to the full path
+        assert np.array_equal(wproj.rows[c], wfull.rows[c])
+        assert np.array_equal(wlate.rows[c],
+                              wfull.rows[c][wfull.rows["c01"] == probe])
+    report("read_plane.scan.wide_full", dt_wfull * 1e6,
+           f"chunks={w_chunks} cols={wcols} bytes={wfull.bytes_scanned} "
+           f"rtt={rtt}ms (every column of every body)")
+    report("read_plane.scan.projected", dt_wproj * 1e6,
+           f"bytes={wproj.bytes_scanned} saved={wproj.bytes_projected_away} "
+           f"reqs={rq_wproj} (2/{wcols} columns via the CHK3 index)")
+    report("read_plane.scan.late", dt_wlate * 1e6,
+           f"bytes={wlate.bytes_scanned} "
+           f"pruned_late={wlate.files_pruned_late}/{w_chunks} "
+           f"reqs={rq_wlate} (data-refuted chunks skip phase 2)")
 
 
 def bench_catalog(report):

@@ -39,6 +39,13 @@ the fleet instead of scaling with it).  Both are counter invariants —
 losing the conditional-GET or single-flight machinery makes every reader
 pay its own probe+replay, blowing through either bound on any machine.
 
+*Byte-pair* floors compare derived ``bytes=`` censuses between two rows
+of the NEW run: ``read_plane.scan.wide_full`` must fetch >= 3x the bytes
+of ``read_plane.scan.projected`` — a scan projecting 2 of 16 columns
+through the CHK3 column-offset index moves ~1/8 of the body bytes, and
+losing the ranged-read path (falling back to full bodies) makes the two
+censuses equal, which any floor > 1 catches on any machine.
+
 Usage: ``python benchmarks/check_floor.py NEW.json --baseline OLD.json``
 """
 
@@ -65,6 +72,11 @@ REQUEST_PAIR_FLOORS = {("restart.warm", "restart.cold"): 1.4}
 # read-plane row -> (minimum "hit_rate=", maximum "reqs_per_reader=") of
 # its derived column, checked on the NEW run alone (counters, load-immune)
 READ_PLANE_FLOORS = {"read_plane.readers.n64": (0.9, 0.5)}
+# (cheap row, expensive row) -> minimum expensive/cheap ratio of their
+# derived "bytes=" censuses, checked on the NEW run alone: the projected
+# scan must keep moving a small fraction of the full scan's bytes
+BYTES_PAIR_FLOORS = {
+    ("read_plane.scan.projected", "read_plane.scan.wide_full"): 3.0}
 
 
 def load_rows(path: str) -> dict:
@@ -146,6 +158,23 @@ def main(argv=None) -> None:
         ratio = b / a
         status = "FAIL" if ratio < floor else "ok"
         print(f"{status:4s} {dear} vs {cheap}: reqs {b} vs {a} "
+              f"({ratio:.2f}x, floor {floor:.2f}x)")
+        if ratio < floor:
+            failures.append(f"{cheap}/{dear}")
+
+    for (cheap, dear), floor in sorted(BYTES_PAIR_FLOORS.items()):
+        if cheap not in new or dear not in new:
+            continue
+        checked += 1
+        a = parse_named_float(new[cheap][1], "bytes")
+        b = parse_named_float(new[dear][1], "bytes")
+        if not a or b is None:
+            print(f"FAIL {cheap}/{dear}: no bytes= in derived columns")
+            failures.append(f"{cheap}/{dear}")
+            continue
+        ratio = b / a
+        status = "FAIL" if ratio < floor else "ok"
+        print(f"{status:4s} {dear} vs {cheap}: bytes {b:.0f} vs {a:.0f} "
               f"({ratio:.2f}x, floor {floor:.2f}x)")
         if ratio < floor:
             failures.append(f"{cheap}/{dear}")

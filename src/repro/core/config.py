@@ -322,10 +322,17 @@ class ReadPlaneOptions:
     ``statsCacheBytes`` budgets the chunk-stats footer cache behind
     ``scan()``'s predicate pushdown (chunk files are write-once, so the
     footer cache never invalidates — only evicts).
+    ``lateMaterialization`` (default on) makes predicated scans fetch in
+    two phases through the CHK3 column index — predicate columns first,
+    then only the projected columns of chunks whose row masks survived;
+    off, a predicated scan fetches every needed column in one ranged
+    round (projection pushdown itself stays on — it needs no knob, the
+    results are byte-identical either way).
     """
     ttl_ms: float = 1000.0
     max_snapshots: int = 64
     stats_cache_bytes: int = 16 * 2**20
+    late_materialization: bool = True
 
     def __post_init__(self):
         if self.ttl_ms < 0:
@@ -340,7 +347,8 @@ class ReadPlaneOptions:
         return ReadPlaneOptions(
             ttl_ms=float(d.get("ttlMs", 1000.0)),
             max_snapshots=int(d.get("maxSnapshots", 64)),
-            stats_cache_bytes=int(d.get("statsCacheBytes", 16 * 2**20)))
+            stats_cache_bytes=int(d.get("statsCacheBytes", 16 * 2**20)),
+            late_materialization=bool(d.get("lateMaterialization", True)))
 
 
 @dataclass(frozen=True)

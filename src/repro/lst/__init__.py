@@ -20,7 +20,9 @@ from repro.lst.storage import (FileSystem, LocalFS, MemoryFS, RetryingFS,
                                RetryPolicy, SimulatedObjectStore,
                                StorageProfile, make_fs)
 from repro.lst.chunkfile import (write_chunk, read_chunk, read_chunk_stats,
-                                 read_chunks_stats, DataFileMeta)
+                                 read_chunks_stats, read_chunks_footers,
+                                 read_chunks_columns, ChunkFooter,
+                                 DataFileMeta)
 from repro.lst import delta, iceberg, hudi
 from repro.lst.table import LakeTable, FORMATS
 
@@ -28,5 +30,6 @@ __all__ = [
     "LocalFS", "MemoryFS", "SimulatedObjectStore", "StorageProfile",
     "RetryingFS", "RetryPolicy", "FileSystem", "make_fs",
     "write_chunk", "read_chunk", "read_chunk_stats", "read_chunks_stats",
+    "read_chunks_footers", "read_chunks_columns", "ChunkFooter",
     "DataFileMeta", "delta", "iceberg", "hudi", "LakeTable", "FORMATS",
 ]

@@ -6,22 +6,38 @@ shard), carrying per-column min/max/count statistics that engines use for
 scan planning (Scenario 3 of the paper: Trino exploiting Iceberg column
 statistics).
 
-Layout (single object, written atomically):
+Layout v3 (single object, written atomically):
 
-    [4-byte magic "CHK2"] [msgpack body] [msgpack footer]
-    [8-byte LE footer offset] [4-byte magic]
+    [4-byte magic "CHK3"] [msgpack header] [column blobs, concatenated]
+    [msgpack footer] [8-byte LE footer offset] [4-byte magic]
 
-The body is a msgpack map:
-    schema:   [{name, dtype, shape}]          column declarations
-    nrows:    int
-    columns:  {name: raw little-endian bytes (optionally zlib)}
-    extra:    arbitrary user metadata (tensor shard coords, tokenizer id, ...)
+The header is a msgpack map ``{schema, nrows, extra}`` (``schema`` is the
+column declaration list ``[{name, dtype, shape, ...}]``, ``extra`` arbitrary
+user metadata — tensor shard coords, tokenizer id, ...).  Each column's
+encoded bytes are laid out *outside* the header, one contiguous blob per
+column in schema order, so any column is addressable by a byte range.
 
-The footer is a msgpack map ``{nrows, stats}`` with
-``stats: {name: {min, max, count, nan_count}}``; the trailing 8-byte
-little-endian integer is the footer's byte offset from the start of the
-object, so ``read_chunk_stats`` needs two ranged reads (tail + footer) and
-never fetches the column data — the Parquet-footer access pattern.
+The footer is a msgpack map
+
+    {nrows, stats, hdr_end, cols, schema}
+
+with ``stats: {name: {min, max, count, nan_count}}``, ``cols: [[name,
+offset, length], ...]`` — the **column-offset index** (absolute byte range
+of every column blob) — and ``schema`` duplicating the header's column
+declarations, so a reader holding only the footer can decode any subset of
+columns from ranged reads without ever touching the header or the other
+columns' bytes.  The trailing 8-byte little-endian integer is the footer's
+byte offset from the start of the object; ``read_chunk_stats`` therefore
+needs two ranged reads (suffix trailer + footer, no ``size`` request) and
+never fetches column data — the Parquet-footer access pattern — while
+:func:`read_chunks_columns` turns the index into *projection pushdown*:
+only the requested columns' ranges are fetched (adjacent ranges coalesced
+into single ranged GETs, all files in one pipelined batch round).
+
+Layout v2 ("CHK2", still readable) kept the columns inside one msgpack
+body map and its footer carried only ``{nrows, stats}``: no column index,
+so projected reads of v2 files transparently fall back to full-body
+fetches.  New files always write v3.
 
 Statistics live in the same object but are *also* duplicated into every
 format's metadata layer by the commit path, which is what makes
@@ -35,22 +51,26 @@ import threading
 import zlib
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Any, Mapping
+from typing import Any, Iterator, Mapping
 
 import msgpack
 import numpy as np
 
-MAGIC = b"CHK2"       # v2: stats footer + trailing footer offset
+MAGIC = b"CHK3"       # v3: column-offset index in the footer
+MAGIC_V2 = b"CHK2"    # v2: stats footer, columns inline in the msgpack body
 _MAGIC_V1 = b"CHK1"   # v1 had stats inline in the body and no footer
 _STR_KIND = "U"
 
 
-def _check_magic(tag: bytes) -> None:
+def _magic_version(tag: bytes) -> int:
+    if tag == MAGIC:
+        return 3
+    if tag == MAGIC_V2:
+        return 2
     if tag == _MAGIC_V1:
         raise ValueError("chunkfile v1 (CHK1, no stats footer) is "
                          "unsupported; rewrite the data file")
-    if tag != MAGIC:
-        raise ValueError("not a chunkfile (bad magic)")
+    raise ValueError("not a chunkfile (bad magic)")
 
 
 @dataclass(frozen=True)
@@ -83,6 +103,31 @@ class DataFileMeta:
     def stats_dict(self) -> dict:
         return {k: (v.to_dict() if isinstance(v, ColumnStats) else v)
                 for k, v in self.column_stats.items()}
+
+
+@dataclass(frozen=True)
+class ChunkFooter:
+    """One file's parsed stats footer (+ the v3 column-offset index).
+
+    ``columns`` is the ordered ``(name, offset, length)`` index of the
+    column blobs (absolute object byte ranges) and ``schema`` maps each
+    column name to its decode declaration — both ``None`` for v2 files,
+    which carry no index (projected reads fall back to full bodies).
+
+    Iterating yields ``(nrows, stats)`` so the footer unpacks exactly like
+    the pre-v3 ``read_chunk_stats`` tuple.
+    """
+    nrows: int
+    stats: dict                             # name -> ColumnStats
+    columns: tuple | None = None            # ((name, offset, length), ...)
+    schema: Mapping | None = None           # name -> decl
+
+    def __iter__(self) -> Iterator:
+        return iter((self.nrows, self.stats))
+
+    @property
+    def projectable(self) -> bool:
+        return self.columns is not None
 
 
 def _scalar(x):
@@ -174,9 +219,28 @@ def _decode_array(decl: Mapping, raw: bytes) -> np.ndarray:
     return np.frombuffer(raw, dtype=np.dtype(decl["dtype"])).reshape(shape)
 
 
+def empty_column(decl: Mapping) -> np.ndarray:
+    """A zero-row array with the dtype/trailing shape ``decl`` decodes to —
+    exactly what an all-False row mask leaves of the column, synthesized
+    without fetching a byte of it (the late-materialized scan's dropped
+    chunks still contribute dtype-exact empties to concatenation)."""
+    shape = (0,) + tuple(decl["shape"][1:])
+    if decl["dtype"] == "str":
+        if decl.get("enc") == "ucs4":
+            return np.empty(shape, dtype=np.dtype(decl["udtype"]))
+        return np.empty(shape, dtype=f"U{decl.get('width', 1)}")
+    return np.empty(shape, dtype=np.dtype(decl["dtype"]))
+
+
 def serialize_chunk(columns: Mapping[str, np.ndarray], *, extra: dict | None = None,
-                    compress: bool = False) -> tuple[bytes, int, dict]:
-    """Encode columns -> (payload bytes, nrows, stats dict)."""
+                    compress: bool = False,
+                    version: int = 3) -> tuple[bytes, int, dict]:
+    """Encode columns -> (payload bytes, nrows, stats dict).
+
+    ``version=2`` writes the legacy CHK2 layout (columns inside the msgpack
+    body, no column index) — kept so back-compat tests can mint old files;
+    production writers always emit v3.
+    """
     nrows = None
     decls, blobs, stats = [], {}, {}
     for name, arr in columns.items():
@@ -188,27 +252,42 @@ def serialize_chunk(columns: Mapping[str, np.ndarray], *, extra: dict | None = N
         decls.append(decl)
         blobs[name] = raw
         stats[name] = _column_stats(arr)
-    body = {
-        "schema": decls,
-        "nrows": nrows or 0,
-        "columns": blobs,
-        "extra": extra or {},
-    }
-    footer = {"nrows": nrows or 0,
-              "stats": {k: v.to_dict() for k, v in stats.items()}}
-    body_packed = msgpack.packb(body)
-    footer_off = len(MAGIC) + len(body_packed)
-    payload = (MAGIC + body_packed + msgpack.packb(footer) +
-               struct.pack("<Q", footer_off) + MAGIC)
+    stats_packed = {k: v.to_dict() for k, v in stats.items()}
+    if version == 2:
+        body = {"schema": decls, "nrows": nrows or 0, "columns": blobs,
+                "extra": extra or {}}
+        body_packed = msgpack.packb(body)
+        footer = {"nrows": nrows or 0, "stats": stats_packed}
+        footer_off = len(MAGIC_V2) + len(body_packed)
+        payload = (MAGIC_V2 + body_packed + msgpack.packb(footer) +
+                   struct.pack("<Q", footer_off) + MAGIC_V2)
+        return payload, nrows or 0, stats
+    if version != 3:
+        raise ValueError(f"unsupported chunkfile version: {version}")
+    header = msgpack.packb({"schema": decls, "nrows": nrows or 0,
+                            "extra": extra or {}})
+    hdr_end = len(MAGIC) + len(header)
+    off = hdr_end
+    cols_index = []
+    for d in decls:
+        raw = blobs[d["name"]]
+        cols_index.append([d["name"], off, len(raw)])
+        off += len(raw)
+    footer = {"nrows": nrows or 0, "stats": stats_packed,
+              "hdr_end": hdr_end, "cols": cols_index, "schema": decls}
+    payload = (MAGIC + header + b"".join(blobs[d["name"]] for d in decls) +
+               msgpack.packb(footer) + struct.pack("<Q", off) + MAGIC)
     return payload, nrows or 0, stats
 
 
 def write_chunk(fs, base_path: str, rel_path: str,
                 columns: Mapping[str, np.ndarray], *,
                 partition_values: dict | None = None,
-                extra: dict | None = None, compress: bool = False) -> DataFileMeta:
+                extra: dict | None = None, compress: bool = False,
+                version: int = 3) -> DataFileMeta:
     """Write one immutable data file; returns its metadata-layer description."""
-    payload, nrows, stats = serialize_chunk(columns, extra=extra, compress=compress)
+    payload, nrows, stats = serialize_chunk(columns, extra=extra,
+                                            compress=compress, version=version)
     full = f"{base_path}/{rel_path}"
     fs.write_bytes(full, payload)  # put-if-absent: data files are write-once
     return DataFileMeta(path=rel_path, size_bytes=len(payload), record_count=nrows,
@@ -245,25 +324,32 @@ def write_chunks(fs, base_path: str,
 _TRAILER_LEN = 8 + len(MAGIC)   # footer offset + closing magic
 
 
-def _unpack(data: bytes) -> tuple[dict, dict]:
-    """Full-object parse -> (body, footer)."""
-    _check_magic(data[:4])
-    _check_magic(data[-4:])
+def _parse_full(data: bytes) -> tuple[dict, dict]:
+    """Full-object parse -> (decoded columns, extra) for either version."""
+    version = _magic_version(data[:4])
+    _magic_version(data[-4:])
     (footer_off,) = struct.unpack("<Q", data[-_TRAILER_LEN:-len(MAGIC)])
     if not len(MAGIC) <= footer_off <= len(data) - _TRAILER_LEN:
         raise ValueError("not a chunkfile (bad footer offset)")
-    body = msgpack.unpackb(data[len(MAGIC):footer_off], strict_map_key=False)
+    if version == 2:
+        body = msgpack.unpackb(data[len(MAGIC):footer_off],
+                               strict_map_key=False)
+        cols = {d["name"]: _decode_array(d, body["columns"][d["name"]])
+                for d in body["schema"]}
+        return cols, body.get("extra", {})
     footer = msgpack.unpackb(data[footer_off:-_TRAILER_LEN],
                              strict_map_key=False)
-    return body, footer
+    header = msgpack.unpackb(data[len(MAGIC):footer["hdr_end"]],
+                             strict_map_key=False)
+    decls = {d["name"]: d for d in footer["schema"]}
+    cols = {name: _decode_array(decls[name], data[off:off + ln])
+            for name, off, ln in footer["cols"]}
+    return cols, header.get("extra", {})
 
 
 def read_chunk(fs, base_path: str, rel_path: str) -> tuple[dict, dict]:
     """Read columns + extra metadata of a data file."""
-    body, _ = _unpack(fs.read_bytes(f"{base_path}/{rel_path}"))
-    cols = {d["name"]: _decode_array(d, body["columns"][d["name"]])
-            for d in body["schema"]}
-    return cols, body.get("extra", {})
+    return _parse_full(fs.read_bytes(f"{base_path}/{rel_path}"))
 
 
 def read_chunks(fs, base_path: str,
@@ -274,66 +360,141 @@ def read_chunks(fs, base_path: str,
     from repro.lst.storage.base import fetch_many
 
     blobs = fetch_many(fs, [f"{base_path}/{p}" for p in rel_paths])
-    out = []
-    for blob in blobs:
-        body, _ = _unpack(blob)
-        out.append(({d["name"]: _decode_array(d, body["columns"][d["name"]])
-                     for d in body["schema"]}, body.get("extra", {})))
-    return out
+    return [_parse_full(blob) for blob in blobs]
 
 
-def read_chunks_stats(fs, base_path: str,
-                      rel_paths: list[str]) -> list[tuple[int, dict]]:
-    """Batched ``read_chunk_stats`` over many files: two pipelined rounds of
-    ranged reads (all trailers, then all footers) via the FileSystem's batch
-    API, instead of (size + 2 ranged reads) sequential round trips per file.
+def _parse_footer(blob: bytes, version: int, path: str) -> ChunkFooter:
+    if len(blob) <= _TRAILER_LEN:
+        raise ValueError(f"not a chunkfile (bad footer offset): {path}")
+    footer = msgpack.unpackb(blob[:-_TRAILER_LEN], strict_map_key=False)
+    stats = {k: ColumnStats.from_dict(v) for k, v in footer["stats"].items()}
+    if version == 2 or "cols" not in footer:
+        return ChunkFooter(footer["nrows"], stats)
+    return ChunkFooter(footer["nrows"], stats,
+                       tuple((c[0], c[1], c[2]) for c in footer["cols"]),
+                       {d["name"]: d for d in footer["schema"]})
+
+
+def read_chunks_footers(fs, base_path: str,
+                        rel_paths: list[str]) -> list[ChunkFooter]:
+    """Batched footer fetch over many files: two pipelined rounds of
+    ranged reads (all trailers, then all footers) via the FileSystem's
+    batch API, instead of (size + 2 ranged reads) sequential round trips
+    per file.
 
     Round 1 suffix-reads each trailer (no ``size`` request needed); round 2
     reads from each footer offset to end-of-object and strips the trailer —
-    so N files cost ~2 batch round trips on a pipelined object store.
+    so N files cost ~2 batch round trips on a pipelined object store.  The
+    returned :class:`ChunkFooter` carries nrows + stats for both versions
+    and, for v3 files, the column-offset index that powers
+    :func:`read_chunks_columns`.
     """
     from repro.lst.storage.base import fetch_many_ranges
 
     fulls = [f"{base_path}/{p}" for p in rel_paths]
     tails = fetch_many_ranges(
         fs, [(f, -_TRAILER_LEN, _TRAILER_LEN) for f in fulls])
-    footer_offs = []
+    versions, footer_offs = [], []
     for p, tail in zip(fulls, tails):
         if len(tail) < _TRAILER_LEN:
             raise ValueError(f"not a chunkfile (truncated): {p}")
-        _check_magic(tail[-4:])
+        versions.append(_magic_version(tail[-4:]))
         (off,) = struct.unpack("<Q", tail[:8])
         footer_offs.append(off)
     blobs = fetch_many_ranges(
         fs, [(f, off, -1) for f, off in zip(fulls, footer_offs)])
-    out = []
-    for p, blob in zip(fulls, blobs):
-        if len(blob) <= _TRAILER_LEN:
-            raise ValueError(f"not a chunkfile (bad footer offset): {p}")
-        footer = msgpack.unpackb(blob[:-_TRAILER_LEN], strict_map_key=False)
-        out.append((footer["nrows"],
-                    {k: ColumnStats.from_dict(v)
-                     for k, v in footer["stats"].items()}))
-    return out
+    return [_parse_footer(blob, ver, p)
+            for p, ver, blob in zip(fulls, versions, blobs)]
+
+
+def read_chunks_stats(fs, base_path: str,
+                      rel_paths: list[str]) -> list[tuple[int, dict]]:
+    """Batched ``read_chunk_stats``: ``[(nrows, stats)]`` per file via the
+    two-round footer fetch of :func:`read_chunks_footers`."""
+    return [(f.nrows, f.stats)
+            for f in read_chunks_footers(fs, base_path, rel_paths)]
 
 
 def read_chunk_stats(fs, base_path: str, rel_path: str) -> tuple[int, dict]:
-    """Read only nrows + stats via two ranged reads (trailer, then footer);
-    the column data is never fetched."""
-    full = f"{base_path}/{rel_path}"
-    size = fs.size(full)
-    if size < 2 * len(MAGIC) + _TRAILER_LEN:
-        raise ValueError("not a chunkfile (truncated)")
-    tail = fs.read_bytes_range(full, size - _TRAILER_LEN, _TRAILER_LEN)
-    _check_magic(tail[-4:])
-    (footer_off,) = struct.unpack("<Q", tail[:8])
-    if not len(MAGIC) <= footer_off <= size - _TRAILER_LEN:
-        raise ValueError("not a chunkfile (bad footer offset)")
-    footer = msgpack.unpackb(
-        fs.read_bytes_range(full, footer_off, size - _TRAILER_LEN - footer_off),
-        strict_map_key=False)
-    return footer["nrows"], {k: ColumnStats.from_dict(v)
-                             for k, v in footer["stats"].items()}
+    """Read only nrows + stats via two ranged reads (suffix trailer, then
+    footer-to-EOF); no ``size`` request, and the column data is never
+    fetched."""
+    footer = read_chunks_footers(fs, base_path, [rel_path])[0]
+    return footer.nrows, footer.stats
+
+
+def read_chunks_columns(fs, base_path: str, rel_paths: list[str],
+                        columns: list[str] | None = None, *,
+                        footers: list[ChunkFooter] | None = None,
+                        exclude: frozenset | set | None = None,
+                        ) -> list[tuple[dict, int]]:
+    """Projection pushdown: fetch only the requested ``columns`` of each
+    file through the v3 column-offset index.
+
+    Per file, the requested columns' byte ranges are looked up in its
+    footer index, adjacent ranges are coalesced into single ranged reads,
+    and every file's ranges go out in ONE pipelined ``read_many_ranges``
+    round — a scan projecting k of N columns moves O(k/N) of the bytes a
+    full-body fetch would.  ``columns=None`` selects every column (still
+    ranged: the header/footer bytes are skipped); ``exclude`` removes
+    columns from the selection *after* that (the two-phase scan uses it to
+    avoid refetching predicate columns it already holds).
+
+    v2 files carry no index and transparently fall back to a full-body
+    read **in the same batch round** (a to-EOF range); every column of
+    such a file comes back, whatever was requested — callers project
+    after the fact.
+
+    ``footers`` (aligned with ``rel_paths``) reuses already-fetched
+    footers — e.g. the read plane's :class:`ChunkStatsCache` entries —
+    otherwise they are fetched first via :func:`read_chunks_footers`
+    (two extra batch rounds).
+
+    Returns ``[(columns dict, bytes fetched)]`` aligned with
+    ``rel_paths``; decoded columns keep the file's schema order.
+    """
+    from repro.lst.storage.base import coalesce_ranges, fetch_many_ranges
+
+    if footers is None:
+        footers = read_chunks_footers(fs, base_path, rel_paths)
+    fulls = [f"{base_path}/{p}" for p in rel_paths]
+    want = None if columns is None else set(columns)
+    drop = frozenset(exclude or ())
+    plans: list = []            # per file: list of index entries | "full"
+    range_reqs: list[tuple[str, int, int]] = []
+    range_owner: list[tuple[int, str]] = []   # (file idx, column name)
+    full_files: list[int] = []
+    for i, (full, ftr) in enumerate(zip(fulls, footers)):
+        if ftr.columns is None:               # v2: no index, whole body
+            plans.append("full")
+            full_files.append(i)
+            continue
+        entries = [e for e in ftr.columns
+                   if (want is None or e[0] in want) and e[0] not in drop]
+        plans.append(entries)
+        for name, off, ln in entries:
+            range_reqs.append((full, off, ln))
+            range_owner.append((i, name))
+    merged, slices = coalesce_ranges(range_reqs)
+    batch = merged + [(fulls[i], 0, -1) for i in full_files]
+    blobs = fetch_many_ranges(fs, batch)
+
+    out: list = [None] * len(fulls)
+    pieces: dict[tuple[int, str], bytes] = {}
+    for (owner, (mi, off, ln)) in zip(range_owner, slices):
+        start = off - merged[mi][1]
+        pieces[owner] = blobs[mi][start:start + ln]
+    for i, ftr in enumerate(footers):
+        if plans[i] == "full":
+            continue
+        cols = {name: _decode_array(ftr.schema[name], pieces[(i, name)])
+                for name, _off, _ln in plans[i]}
+        out[i] = (cols, sum(ln for _n, _o, ln in plans[i]))
+    for j, i in enumerate(full_files):
+        blob = blobs[len(merged) + j]
+        cols, _extra = _parse_full(blob)
+        out[i] = (cols, len(blob))
+    return out
 
 
 def stats_refute(stats: Mapping[str, ColumnStats], column: str, op: str,
@@ -368,25 +529,31 @@ def stats_refute(stats: Mapping[str, ColumnStats], column: str, op: str,
     return False
 
 
-def _stats_cost(stats: Mapping[str, ColumnStats], path: str) -> int:
+def _footer_cost(footer: ChunkFooter, path: str) -> int:
     """Approximate retained bytes of one cached footer entry."""
     cost = 96 + len(path)
-    for name, st in stats.items():
+    for name, st in footer.stats.items():
         cost += 64 + len(name)
         for v in (st.min, st.max):
             cost += len(v) * 4 if isinstance(v, str) else 8
+    if footer.columns is not None:
+        # column-offset index + decode decls ride along in the entry
+        cost += sum(88 + 2 * len(name) for name, _o, _l in footer.columns)
     return cost
 
 
 class ChunkStatsCache:
-    """Byte-budgeted LRU of chunk stats footers, keyed by full chunk path.
+    """Byte-budgeted LRU of chunk footers, keyed by full chunk path.
 
     Chunk files are write-once and uniquely named, so a cached footer is
     valid forever — the cache only ever *evicts* (over budget), never
     invalidates.  ``get_many`` serves hits from memory and fetches all
-    misses through :func:`read_chunks_stats`'s two pipelined ranged-read
+    misses through :func:`read_chunks_footers`'s two pipelined ranged-read
     rounds, so a scan over N files costs at most 2 batch round trips on
-    its first pass and ZERO footer requests on every later pass.
+    its first pass and ZERO footer requests on every later pass.  Each
+    entry is a full :class:`ChunkFooter` — for v3 files the column-offset
+    index rides along for free, which is what lets a warm projected scan
+    go straight to its single column-range round.
 
     Thread-safe; concurrent misses on the same path may fetch twice, but
     both fetch the same immutable bytes, so last-insert-wins is correct.
@@ -395,8 +562,8 @@ class ChunkStatsCache:
     def __init__(self, max_bytes: int = 16 * 2**20):
         self.max_bytes = int(max_bytes)
         self._lock = threading.Lock()
-        # path -> (nrows, stats, cost); OrderedDict end = most recent
-        self._entries: OrderedDict[str, tuple[int, dict, int]] = OrderedDict()
+        # path -> (footer, cost); OrderedDict end = most recent
+        self._entries: OrderedDict[str, tuple[ChunkFooter, int]] = OrderedDict()
         self._bytes = 0
         self.hits = 0
         self.misses = 0
@@ -407,8 +574,8 @@ class ChunkStatsCache:
             return len(self._entries)
 
     def get_many(self, fs, base_path: str,
-                 rel_paths: list[str]) -> list[tuple[int, dict]]:
-        """``[(nrows, {column: ColumnStats})]`` aligned with ``rel_paths``."""
+                 rel_paths: list[str]) -> list[ChunkFooter]:
+        """:class:`ChunkFooter` per path, aligned with ``rel_paths``."""
         fulls = [f"{base_path}/{p}" for p in rel_paths]
         out: list = [None] * len(fulls)
         missing: list[int] = []
@@ -418,24 +585,24 @@ class ChunkStatsCache:
                 if ent is not None:
                     self._entries.move_to_end(full)
                     self.hits += 1
-                    out[i] = (ent[0], ent[1])
+                    out[i] = ent[0]
                 else:
                     missing.append(i)
         if not missing:
             return out
-        fetched = read_chunks_stats(fs, base_path,
-                                    [rel_paths[i] for i in missing])
+        fetched = read_chunks_footers(fs, base_path,
+                                      [rel_paths[i] for i in missing])
         with self._lock:
             self.misses += len(missing)
-            for i, (nrows, stats) in zip(missing, fetched):
-                out[i] = (nrows, stats)
+            for i, footer in zip(missing, fetched):
+                out[i] = footer
                 full = fulls[i]
                 if full not in self._entries:
-                    cost = _stats_cost(stats, full)
-                    self._entries[full] = (nrows, stats, cost)
+                    cost = _footer_cost(footer, full)
+                    self._entries[full] = (footer, cost)
                     self._bytes += cost
             while self._bytes > self.max_bytes and len(self._entries) > 1:
-                _, (_, _, cost) = self._entries.popitem(last=False)
+                _, (_, cost) = self._entries.popitem(last=False)
                 self._bytes -= cost
                 self.evictions += 1
         return out

@@ -125,6 +125,62 @@ def fetch_many_ranges(fs, requests: Sequence[tuple[str, int, int]]) -> list[byte
     return [fs.read_bytes_range(p, off, ln) for p, off, ln in requests]
 
 
+def coalesce_ranges(requests: Sequence[tuple[str, int, int]], *,
+                    max_gap: int = 0):
+    """Merge per-path overlapping/adjacent byte ranges into one request each.
+
+    ``requests`` are ``(path, offset, length)`` with non-negative offsets
+    and positive lengths (suffix / to-EOF reads cannot be coalesced or
+    sliced back without knowing the object size).  Two ranges of the same
+    path merge when the gap between them is at most ``max_gap`` bytes —
+    the columnar projection path uses ``0`` so adjacent column blobs
+    become a single ranged GET without ever fetching an unrequested byte.
+
+    Returns ``(merged, slices)``: ``merged`` is the deduplicated request
+    list to hand to :func:`fetch_many_ranges`, and ``slices[i] =
+    (merged_index, offset, length)`` locates original request ``i``
+    inside its merged range (slice the reply with
+    ``blob[offset - merged_offset:][:length]``).
+    """
+    by_path: dict[str, list[tuple[int, int, int]]] = {}
+    for i, (path, off, ln) in enumerate(requests):
+        if off < 0 or ln < 0:
+            raise ValueError("coalesce_ranges needs explicit offset+length "
+                             f"ranges, got ({path!r}, {off}, {ln})")
+        by_path.setdefault(path, []).append((off, ln, i))
+    merged: list[list] = []          # [path, offset, end]
+    slices: list = [None] * len(requests)
+    for path, items in by_path.items():
+        items.sort()
+        cur = -1
+        for off, ln, i in items:
+            if cur >= 0 and off <= merged[cur][2] + max_gap:
+                merged[cur][2] = max(merged[cur][2], off + ln)
+            else:
+                merged.append([path, off, off + ln])
+                cur = len(merged) - 1
+            slices[i] = (cur, off, ln)
+    return [(p, off, end - off) for p, off, end in merged], slices
+
+
+def fetch_many_ranges_coalesced(
+        fs, requests: Sequence[tuple[str, int, int]], *,
+        max_gap: int = 0) -> list[bytes]:
+    """:func:`fetch_many_ranges` with per-path range coalescing: adjacent
+    requested ranges are fetched as single ranged reads (one pipelined
+    batch round total) and sliced back per original request."""
+    requests = list(requests)
+    if not requests:
+        return []
+    merged, slices = coalesce_ranges(requests, max_gap=max_gap)
+    blobs = fetch_many_ranges(fs, merged)
+    out = []
+    for mi, off, ln in slices:
+        start = off - merged[mi][1]
+        out.append(blobs[mi][start:start + ln])
+    return out
+
+
 def flush_many(fs, items: Sequence[tuple[str, bytes]], *,
                overwrite: bool = False) -> None:
     """``fs.write_many`` with a sequential fallback (the write-side twin of

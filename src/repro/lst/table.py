@@ -156,10 +156,26 @@ class LakeTable:
     def scan(self, *predicates: Predicate,
              version: str | None = None,
              columns: list[str] | None = None) -> Iterator[dict]:
-        """Yield per-file column dicts; files pruned via metadata stats."""
+        """Yield per-file column dicts; files pruned via metadata stats.
+
+        All surviving files are fetched in ONE pipelined batch round, and
+        a ``columns`` projection is pushed below the round trip: only the
+        requested + predicate columns' byte ranges are read through the
+        CHK3 column index (CHK2 files fall back to full bodies in the
+        same round) — the local-API scan gets the same economics as the
+        read plane's.
+        """
         st = self.state(version)
-        for f in self.plan_files(st, predicates):
-            cols, _ = chunkfile.read_chunk(self.fs, self.base, f.path)
+        plan = self.plan_files(st, predicates)
+        paths = [f.path for f in plan]
+        if columns:
+            need = sorted({*columns, *(p.column for p in predicates)})
+            bodies = [cols for cols, _nbytes in chunkfile.read_chunks_columns(
+                self.fs, self.base, paths, need)]
+        else:
+            bodies = [cols for cols, _extra in chunkfile.read_chunks(
+                self.fs, self.base, paths)]
+        for f, cols in zip(plan, bodies):
             mask = np.ones(f.record_count, bool)
             for p in predicates:
                 if p.column in cols:
@@ -175,8 +191,10 @@ class LakeTable:
         return [f for f in st.files.values()
                 if all(p.may_match_file(f) for p in predicates)]
 
-    def read_all(self, *predicates: Predicate, version: str | None = None) -> dict:
-        batches = list(self.scan(*predicates, version=version))
+    def read_all(self, *predicates: Predicate, version: str | None = None,
+                 columns: list[str] | None = None) -> dict:
+        batches = list(self.scan(*predicates, version=version,
+                                 columns=columns))
         if not batches:
             return {}
         return {c: np.concatenate([b[c] for b in batches])

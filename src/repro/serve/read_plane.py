@@ -41,10 +41,23 @@ generations.
 On top of snapshots, :meth:`SnapshotServer.scan` adds predicate pushdown
 into the chunkfile stats footers: chunks whose min/max/nan_count refute
 the predicate are pruned without touching their column data, footers are
-fetched through the existing two-round batched ``read_chunks_stats`` and
-cached immutably by chunk path (chunks are write-once — the footer cache
-never invalidates), and the surviving bodies come back in one pipelined
-batch round.
+fetched through the two-round batched footer read and cached immutably
+by chunk path (chunks are write-once — the footer cache never
+invalidates), and the surviving bodies come back in one pipelined batch
+round.
+
+With the CHK3 column-offset index (which rides for free in the cached
+footer entries) the scan also pushes **projection** below the storage
+round trip: only the requested + predicate columns' byte ranges are
+fetched, adjacent ranges coalesced, all files per phase in one pipelined
+``read_many_ranges`` round.  Predicated scans are **late-materializing**
+by default (``readPlane.lateMaterialization``): phase 1 fetches just the
+predicate columns and evaluates the row masks, chunks whose mask comes
+back all-False are dropped before their remaining columns are ever
+fetched (the data refutes what the stats could not), and phase 2 fetches
+only the surviving chunks' projected columns.  Results stay
+byte-identical to a full-body scan; CHK2 files transparently fall back
+to full-body reads inside the same batch rounds.
 """
 
 from __future__ import annotations
@@ -133,15 +146,28 @@ class GroupSnapshot:
 
 @dataclass
 class ScanResult:
-    """Rows + the pruning census of one pushed-down scan."""
+    """Rows + the pruning census of one pushed-down scan.
+
+    ``bytes_scanned`` counts body bytes actually FETCHED — with the CHK3
+    column index a projected or late-materialized scan moves only the
+    needed columns' ranges, and ``bytes_projected_away`` is what the
+    index let it skip (candidate body bytes minus fetched bytes).
+    ``files_pruned_late`` counts chunks whose phase-1 predicate columns
+    proved no row matches (all-False mask), so their remaining columns
+    were never fetched; such chunks were still touched, so they stay in
+    ``files_scanned`` and the census invariant ``files_scanned +
+    files_pruned_stats + files_pruned_meta == files_total`` is unchanged.
+    """
     token: str
     rows: dict = field(default_factory=dict)   # column -> np.ndarray
     files_total: int = 0
     files_pruned_meta: int = 0     # refuted by metadata-layer stats
     files_pruned_stats: int = 0    # refuted by chunk footer stats
-    files_scanned: int = 0         # bodies actually fetched
-    bytes_scanned: int = 0         # body bytes fetched
-    bytes_skipped: int = 0         # body bytes pruning avoided
+    files_pruned_late: int = 0     # all-False phase-1 mask: phase 2 skipped
+    files_scanned: int = 0         # chunks whose data was touched
+    bytes_scanned: int = 0         # body bytes actually fetched
+    bytes_projected_away: int = 0  # candidate body bytes the index skipped
+    bytes_skipped: int = 0         # body bytes stats pruning avoided
 
 
 @dataclass
@@ -250,7 +276,14 @@ class SnapshotServer:
                       predicates: tuple[Predicate, ...] = (), *,
                       columns: list[str] | None = None) -> ScanResult:
         """``scan()`` against a snapshot the reader already holds (the
-        pinned-view variant: immune to concurrent commits)."""
+        pinned-view variant: immune to concurrent commits).
+
+        ``columns`` projects the result, pushed below the round trip via
+        the CHK3 column index; with predicates and
+        ``readPlane.lateMaterialization`` on (default) the fetch is
+        two-phase (see module doc).  A no-predicate, no-projection scan
+        keeps the single pipelined full-body round.
+        """
         predicates = tuple(predicates)
         res = ScanResult(token=snap.token)
         metas = list(snap.state.files.values())
@@ -258,44 +291,144 @@ class SnapshotServer:
         candidates = [f for f in metas
                       if all(p.may_match_file(f) for p in predicates)]
         res.files_pruned_meta = len(metas) - len(candidates)
-        # footer pushdown: only worth a (cached, batched) footer fetch
-        # when a predicate could actually refute on column stats
-        if candidates and any(p.column not in f.partition_values
-                              for p in predicates for f in candidates):
+        project = bool(columns)
+        late = bool(predicates) and self.options.late_materialization
+        want_stats = any(p.column not in f.partition_values
+                         for p in predicates for f in candidates)
+        footers = None
+        # ONE (cached, batched) footer fetch powers BOTH the stats
+        # refutation and the column index the projected phases need
+        if candidates and (want_stats or project or late):
             footers = self.stats_cache.get_many(
                 self.fs, snap.base_path, [f.path for f in candidates])
-            kept = []
-            for f, (_nrows, fstats) in zip(candidates, footers):
-                if any(chunkfile.stats_refute(fstats, p.column, p.op,
-                                              p.value)
-                       for p in predicates
-                       if p.column not in f.partition_values):
-                    res.files_pruned_stats += 1
-                    res.bytes_skipped += f.size_bytes
-                else:
-                    kept.append(f)
-            candidates = kept
+            if want_stats:
+                kept = []
+                for f, ftr in zip(candidates, footers):
+                    if any(chunkfile.stats_refute(ftr.stats, p.column,
+                                                  p.op, p.value)
+                           for p in predicates
+                           if p.column not in f.partition_values):
+                        res.files_pruned_stats += 1
+                        res.bytes_skipped += f.size_bytes
+                    else:
+                        kept.append((f, ftr))
+                candidates = [f for f, _ in kept]
+                footers = [ftr for _, ftr in kept]
         res.files_scanned = len(candidates)
-        res.bytes_scanned = sum(f.size_bytes for f in candidates)
-        bodies = chunkfile.read_chunks(self.fs, snap.base_path,
-                                       [f.path for f in candidates])
-        batches = []
-        for f, (cols, _extra) in zip(candidates, bodies):
-            # sized from the data, not f.record_count — a stats-poor
-            # metadata layer may carry 0 there
-            nrows = next(iter(cols.values())).shape[0] if cols else 0
-            mask = np.ones(nrows, bool)
-            for p in predicates:
-                if p.column in cols:
-                    mask &= p.mask(cols[p.column])
-            if columns:
-                cols = {c: cols[c] for c in columns if c in cols}
-            batches.append({c: a[mask] if a.shape[:1] == mask.shape else a
-                            for c, a in cols.items()})
+        full_bytes = sum(f.size_bytes for f in candidates)
+        if not candidates:
+            return res
+        if not project and not late:
+            # the pre-index path, unchanged: ONE pipelined full-body round
+            res.bytes_scanned = full_bytes
+            bodies = chunkfile.read_chunks(self.fs, snap.base_path,
+                                           [f.path for f in candidates])
+            batches = [self._finish(cols, predicates, columns)
+                       for cols, _extra in bodies]
+        elif late:
+            batches = self._scan_late(snap.base_path, candidates, footers,
+                                      predicates, columns, res)
+        else:
+            # projection without predicates (or knob off): one ranged
+            # round over the needed columns of every candidate
+            need = sorted({*columns, *(p.column for p in predicates)})
+            fetched = chunkfile.read_chunks_columns(
+                self.fs, snap.base_path, [f.path for f in candidates],
+                need, footers=footers)
+            batches = []
+            for cols, nbytes in fetched:
+                res.bytes_scanned += nbytes
+                batches.append(self._finish(cols, predicates, columns))
+        res.bytes_projected_away = full_bytes - res.bytes_scanned
         if batches:
             res.rows = {c: np.concatenate([b[c] for b in batches])
                         for c in batches[0]}
         return res
+
+    @staticmethod
+    def _finish(cols: dict, predicates, columns) -> dict:
+        """Mask + project one file's columns.  The mask is sized from the
+        data, not the metadata record_count — a stats-poor metadata layer
+        may carry 0 there."""
+        nrows = next(iter(cols.values())).shape[0] if cols else 0
+        mask = np.ones(nrows, bool)
+        for p in predicates:
+            if p.column in cols:
+                mask &= p.mask(cols[p.column])
+        if columns:
+            cols = {c: cols[c] for c in columns if c in cols}
+        return {c: a[mask] if a.shape[:1] == mask.shape else a
+                for c, a in cols.items()}
+
+    def _scan_late(self, base_path: str, candidates, footers, predicates,
+                   columns, res: ScanResult) -> list:
+        """Two-phase late materialization over one scan's candidates.
+
+        Phase 1 fetches ONLY the predicate columns of every candidate
+        (one ranged batch round; CHK2 files fall back to full bodies in
+        the same round) and evaluates the row masks.  A CHK3 chunk whose
+        mask comes back all-False is dropped — the data refuted what its
+        stats could not — contributing a zero-row batch synthesized from
+        its footer schema (so concatenation dtypes match the full-body
+        scan exactly) and never paying for its remaining columns.  Phase
+        2 fetches the survivors' still-missing output columns in one
+        more ranged batch round.
+        """
+        project = bool(columns)
+        pred_cols = sorted({p.column for p in predicates})
+        phase1 = chunkfile.read_chunks_columns(
+            self.fs, base_path, [f.path for f in candidates], pred_cols,
+            footers=footers)
+        batches: list = [None] * len(candidates)
+        work = []                          # (index, cols1, mask) for phase 2
+        p2_paths, p2_footers = [], []
+        for i, (f, ftr, (cols1, nbytes)) in enumerate(
+                zip(candidates, footers, phase1)):
+            res.bytes_scanned += nbytes
+            nrows = (next(iter(cols1.values())).shape[0] if cols1
+                     else ftr.nrows)
+            mask = np.ones(nrows, bool)
+            for p in predicates:
+                if p.column in cols1:
+                    mask &= p.mask(cols1[p.column])
+            if not ftr.projectable:
+                # CHK2: phase 1 was already the whole body — finish now
+                cols = cols1
+                if project:
+                    cols = {c: cols[c] for c in columns if c in cols}
+                batches[i] = {c: a[mask] if a.shape[:1] == mask.shape else a
+                              for c, a in cols.items()}
+                continue
+            out_names = ([c for c in columns if c in ftr.schema] if project
+                         else [n for n, _o, _l in ftr.columns])
+            if not mask.any() and all(
+                    tuple(ftr.schema[c]["shape"][:1]) == (nrows,)
+                    for c in out_names):
+                res.files_pruned_late += 1
+                batches[i] = {c: chunkfile.empty_column(ftr.schema[c])
+                              for c in out_names}
+                continue
+            work.append((i, cols1, mask))
+            p2_paths.append(f.path)
+            p2_footers.append(ftr)
+        if work:
+            fetched2 = chunkfile.read_chunks_columns(
+                self.fs, base_path, p2_paths,
+                columns if project else None,
+                footers=p2_footers, exclude=set(pred_cols))
+            for (i, cols1, mask), (cols2, nbytes) in zip(work, fetched2):
+                res.bytes_scanned += nbytes
+                merged = {**cols1, **cols2}
+                if project:
+                    cols = {c: merged[c] for c in columns if c in merged}
+                else:
+                    # restore the file's schema order (phase-1 predicate
+                    # columns came first in `merged`)
+                    cols = {n: merged[n] for n, _o, _l in footers[i].columns
+                            if n in merged}
+                batches[i] = {c: a[mask] if a.shape[:1] == mask.shape else a
+                              for c, a in cols.items()}
+        return batches
 
     # ------------------------------------------------- catalog-pinned reads
     def read_at(self, base_path: str, fmt: str, token: str,

@@ -1,0 +1,454 @@
+"""Columnar projection pushdown (ISSUE 10): the CHK3 column-offset index,
+ranged per-column reads, and late-materialized scans.
+
+The counting-FS pins here are the read-side byte contract: a scan
+projecting k of N columns over a CHK3 table fetches O(k/N) of the
+full-scan bytes in at most 2 pipelined ranged-read rounds beyond the
+footer round, a no-projection no-predicate scan keeps the single
+full-body round, and every projected / late-materialized result is
+byte-identical (values AND dtypes) to the full-body scan.  CHK2 files
+keep reading through transparent full-body fallback, including mixed
+CHK2/CHK3 tables.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import ManualClock, MetadataCache, ReadPlaneOptions
+from repro.lst import chunkfile
+from repro.lst.schema import Field, Schema
+from repro.lst.storage import MemoryFS
+from repro.lst.table import LakeTable, Predicate
+from repro.serve.read_plane import SnapshotServer
+
+
+class RoundCountingFS(MemoryFS):
+    """Counts batch ROUNDS (not per-object requests) and chunk bytes moved,
+    split by full-body vs ranged — the currency of the projection pins."""
+
+    def __init__(self):
+        super().__init__()
+        self._tl = threading.local()
+        self.reset()
+
+    def reset(self):
+        self.full_rounds = 0       # batch/singular full-body chunk fetches
+        self.ranged_rounds = 0     # read_many_ranges batches touching chunks
+        self.ranged_requests = 0   # individual ranges inside those rounds
+        self.full_bytes = 0
+        self.ranged_bytes = 0
+        self.size_calls = 0
+
+    def read_bytes(self, path):
+        data = super().read_bytes(path)
+        if path.endswith(".chunk") and not getattr(self._tl, "inner", False):
+            self.full_rounds += 1
+            self.full_bytes += len(data)
+        return data
+
+    def read_many(self, paths):
+        self._tl.inner = True
+        try:
+            out = super().read_many(paths)
+        finally:
+            self._tl.inner = False
+        chunk_blobs = [b for p, b in zip(paths, out) if p.endswith(".chunk")]
+        if chunk_blobs:
+            self.full_rounds += 1
+            self.full_bytes += sum(len(b) for b in chunk_blobs)
+        return out
+
+    def read_bytes_range(self, path, offset, length):
+        self._tl.inner = True
+        try:
+            return super().read_bytes_range(path, offset, length)
+        finally:
+            self._tl.inner = False
+
+    def read_many_ranges(self, requests):
+        self._tl.inner = True
+        try:
+            out = super().read_many_ranges(requests)
+        finally:
+            self._tl.inner = False
+        hits = [b for (p, _o, _l), b in zip(requests, out)
+                if p.endswith(".chunk")]
+        if hits:
+            self.ranged_rounds += 1
+            self.ranged_requests += len(hits)
+            self.ranged_bytes += sum(len(b) for b in hits)
+        return out
+
+    def size(self, path):
+        self.size_calls += 1
+        return super().size(path)
+
+
+def _server(fs, **opts):
+    return SnapshotServer(fs, options=ReadPlaneOptions(**opts),
+                          cache=MetadataCache(fs), clock=ManualClock())
+
+
+NCOLS = 16
+
+
+def _wide_table(fs, base, n_chunks=4, rows=64, seed=0):
+    """16 equal-width int64/float64 columns -> each column is 1/16 of the
+    body bytes, so byte ratios are easy to pin."""
+    schema = Schema([Field(f"c{i:02d}", "int64" if i % 2 else "float64")
+                     for i in range(NCOLS)])
+    t = LakeTable.create(fs, base, schema, "delta")
+    rng = np.random.default_rng(seed)
+    for c in range(n_chunks):
+        t.append({f"c{i:02d}": (np.arange(c * rows, (c + 1) * rows) * (i + 1)
+                                if i % 2 else rng.normal(size=rows))
+                  for i in range(NCOLS)})
+    return t
+
+
+# ------------------------------------------------------------- CHK3 format
+def test_chk3_roundtrip_index_addresses_every_column():
+    fs = MemoryFS()
+    rng = np.random.default_rng(0)
+    cols = {"a": np.arange(7), "b": rng.normal(size=7),
+            "s": np.array(["x", "yy", "zzz", "w", "v", "u", "t"]),
+            "u": np.array(["é", "λ", "ü", "π", "ß", "ø", "å"])}
+    chunkfile.write_chunk(fs, "bkt/t", "data/f.chunk", cols,
+                          extra={"tag": 42})
+    raw = fs.read_bytes("bkt/t/data/f.chunk")
+    assert raw[:4] == b"CHK3" and raw[-4:] == b"CHK3"
+
+    back, extra = chunkfile.read_chunk(fs, "bkt/t", "data/f.chunk")
+    assert extra == {"tag": 42} and list(back) == list(cols)
+    for c in cols:
+        np.testing.assert_array_equal(back[c], np.asarray(cols[c]))
+
+    ftr = chunkfile.read_chunks_footers(fs, "bkt/t", ["data/f.chunk"])[0]
+    assert ftr.projectable
+    assert [n for n, _o, _l in ftr.columns] == list(cols)
+    # the index's byte ranges decode each column standalone
+    for name, off, ln in ftr.columns:
+        np.testing.assert_array_equal(
+            chunkfile._decode_array(ftr.schema[name], raw[off:off + ln]),
+            np.asarray(cols[name]))
+    # footer still unpacks like the old (nrows, stats) tuple
+    nrows, stats = ftr
+    assert nrows == 7 and stats["a"].min == 0 and stats["a"].max == 6
+
+
+def test_read_chunks_columns_moves_only_requested_bytes_in_one_round():
+    fs = RoundCountingFS()
+    _wide_table(fs, "bkt/w", n_chunks=3, rows=128)
+    t = LakeTable.open(fs, "bkt/w", "delta")
+    paths = [f.path for f in t.state().files.values()]
+    footers = chunkfile.read_chunks_footers(fs, "bkt/w", paths)
+    full = sum(fs.size(f"bkt/w/{p}") for p in paths)
+
+    fs.reset()
+    out = chunkfile.read_chunks_columns(fs, "bkt/w", paths,
+                                        ["c03", "c04"], footers=footers)
+    assert fs.ranged_rounds == 1 and fs.full_rounds == 0
+    # c03/c04 are adjacent blobs -> coalesced to ONE range per file
+    assert fs.ranged_requests == len(paths)
+    fetched = sum(n for _cols, n in out)
+    assert fetched == fs.ranged_bytes
+    assert fetched * (NCOLS // 2 - 1) < full          # ~2/16 of the body
+    for (cols, _n), p in zip(out, paths):
+        assert list(cols) == ["c03", "c04"]
+        ref, _ = chunkfile.read_chunk(fs, "bkt/w", p)
+        for c in cols:
+            np.testing.assert_array_equal(cols[c], ref[c])
+
+    # columns=None still rides the index: all 16 blobs coalesce into one
+    # range per file that skips the header/footer bytes
+    fs.reset()
+    out = chunkfile.read_chunks_columns(fs, "bkt/w", paths, None,
+                                        footers=footers)
+    assert fs.ranged_rounds == 1 and fs.ranged_requests == len(paths)
+    assert all(list(cols) == [f"c{i:02d}" for i in range(NCOLS)]
+               for cols, _n in out)
+
+
+def test_singular_read_chunk_stats_two_ranged_reads_no_size_call():
+    fs = RoundCountingFS()
+    chunkfile.write_chunk(fs, "bkt/t", "d/x.chunk",
+                          {"k": np.arange(9), "v": np.ones(9)})
+    fs.reset()
+    nrows, stats = chunkfile.read_chunk_stats(fs, "bkt/t", "d/x.chunk")
+    assert nrows == 9 and stats["k"].max == 8
+    assert fs.size_calls == 0                 # the suffix-read trick
+    assert fs.ranged_rounds == 2 and fs.full_rounds == 0
+
+
+# ------------------------------------------------------- scan round/byte pins
+def test_scan_round_and_byte_pins_full_vs_projected():
+    fs = RoundCountingFS()
+    _wide_table(fs, "bkt/w", n_chunks=4, rows=64)
+    server = _server(fs)
+    snap = server.read("bkt/w", "delta").snapshot
+
+    fs.reset()
+    full = server.scan_snapshot(snap)
+    # no projection, no predicate: today's single full-body round
+    assert fs.full_rounds == 1 and fs.ranged_rounds == 0
+    assert full.bytes_scanned == fs.full_bytes
+    assert full.bytes_projected_away == 0
+
+    # cold projected scan: footer fetch (2 ranged rounds) + 1 column round
+    fs.reset()
+    proj = server.scan_snapshot(snap, columns=["c02", "c03"])
+    assert fs.full_rounds == 0 and fs.ranged_rounds == 3
+    assert full.bytes_scanned >= 3 * proj.bytes_scanned   # >= 3x reduction
+    assert proj.bytes_projected_away == \
+        full.bytes_scanned - proj.bytes_scanned
+    for c in ("c02", "c03"):
+        np.testing.assert_array_equal(proj.rows[c], full.rows[c])
+    assert list(proj.rows) == ["c02", "c03"]
+
+    # warm footer cache: ONE ranged round total
+    fs.reset()
+    again = server.scan_snapshot(snap, columns=["c02", "c03"])
+    assert fs.full_rounds == 0 and fs.ranged_rounds == 1
+    assert again.bytes_scanned == proj.bytes_scanned
+
+    # predicated + projected, warm: phase 1 + phase 2 = 2 ranged rounds
+    pred = (Predicate("c01", "<", int(64 * 2 * 0.5)),)
+    fs.reset()
+    res = server.scan_snapshot(snap, pred, columns=["c02"])
+    assert fs.full_rounds == 0 and fs.ranged_rounds <= 2
+    mask = pred[0].mask(full.rows["c01"])
+    np.testing.assert_array_equal(res.rows["c02"], full.rows["c02"][mask])
+    assert res.bytes_scanned + res.bytes_projected_away + res.bytes_skipped \
+        == sum(f.size_bytes for f in snap.files.values()
+               if all(p.may_match_file(f) for p in pred))
+
+
+def test_late_materialization_skips_data_refuted_chunks():
+    fs = RoundCountingFS()
+    schema = Schema([Field("k", "int64"), Field("v", "float64"),
+                     Field("s", "string")])
+    t = LakeTable.create(fs, "bkt/t", schema, "delta")
+    # chunk A: even k only; chunk B: odd k only.  Stats (min/max) cannot
+    # refute "k == 51" for either; A's DATA can.  Both v columns straddle
+    # 2.0 without containing it — "v == 2.0" is data-refutable everywhere.
+    t.append({"k": np.arange(0, 100, 2),
+              "v": np.where(np.arange(50) % 2, 3.0, 1.0),
+              "s": np.array([f"a{i}" for i in range(50)])})
+    t.append({"k": np.arange(1, 101, 2),
+              "v": np.where(np.arange(50) % 2, 4.0, 0.0),
+              "s": np.array([f"b{i}" for i in range(50)])})
+    pred = (Predicate("k", "==", 51),)
+
+    on = _server(fs)
+    off = _server(fs, late_materialization=False)
+    assert not off.options.late_materialization
+    snap = on.read("bkt/t", "delta").snapshot
+    ref = off.scan_snapshot(off.read("bkt/t", "delta").snapshot, pred)
+    res = on.scan_snapshot(snap, pred)
+
+    assert res.files_pruned_late == 1        # A dropped by its own data
+    assert res.files_scanned == 2            # census unchanged: A was touched
+    assert res.bytes_scanned < ref.bytes_scanned
+    assert list(res.rows) == list(ref.rows)
+    for c in ref.rows:
+        assert res.rows[c].dtype == ref.rows[c].dtype
+        np.testing.assert_array_equal(res.rows[c], ref.rows[c])
+
+    # all-False everywhere: structure/dtypes still match the full scan
+    none = on.scan_snapshot(snap, (Predicate("v", "==", 2.0),))
+    ref_none = off.scan_snapshot(snap, (Predicate("v", "==", 2.0),))
+    assert none.files_pruned_late == 2
+    assert {c: a.dtype for c, a in none.rows.items()} == \
+        {c: a.dtype for c, a in ref_none.rows.items()}
+    assert all(a.shape[0] == 0 for a in none.rows.values())
+
+
+# ---------------------------------------------------------- CHK2 back-compat
+def _mixed_table(fs, base):
+    """One CHK2 file + one CHK3 file in the same committed table."""
+    schema = Schema([Field("k", "int64"), Field("v", "float64"),
+                     Field("s", "string")])
+    t = LakeTable.create(fs, base, schema, "delta")
+    m2 = chunkfile.write_chunk(fs, base, "data/old.chunk",
+                               {"k": np.arange(10), "v": np.ones(10),
+                                "s": np.array([f"o{i}" for i in range(10)])},
+                               version=2)
+    m3 = chunkfile.write_chunk(fs, base, "data/new.chunk",
+                               {"k": np.arange(10, 20), "v": np.zeros(10),
+                                "s": np.array([f"n{i}" for i in range(10)])})
+    t.handle.commit([m2, m3], operation="WRITE")
+    return t
+
+
+def test_chk2_files_still_read_with_full_body_fallback():
+    fs = RoundCountingFS()
+    _mixed_table(fs, "bkt/m")
+    assert fs.read_bytes("bkt/m/data/old.chunk")[:4] == b"CHK2"
+
+    cols, _ = chunkfile.read_chunk(fs, "bkt/m", "data/old.chunk")
+    np.testing.assert_array_equal(cols["k"], np.arange(10))
+    nrows, stats = chunkfile.read_chunk_stats(fs, "bkt/m", "data/old.chunk")
+    assert nrows == 10 and stats["k"].max == 9
+    ftrs = chunkfile.read_chunks_footers(fs, "bkt/m",
+                                         ["data/old.chunk", "data/new.chunk"])
+    assert not ftrs[0].projectable and ftrs[1].projectable
+
+    # projected batch read: v2 full body and v3 ranges in ONE round
+    fs.reset()
+    out = chunkfile.read_chunks_columns(
+        fs, "bkt/m", ["data/old.chunk", "data/new.chunk"], ["k"],
+        footers=ftrs)
+    assert fs.ranged_rounds == 1 and fs.full_rounds == 0
+    assert list(out[0][0]) == ["k", "v", "s"]     # v2: every column back
+    assert list(out[1][0]) == ["k"]               # v3: only the requested
+    assert out[0][1] == fs.size("bkt/m/data/old.chunk")
+
+
+def test_mixed_table_scans_identical_to_full_scan():
+    fs = RoundCountingFS()
+    _mixed_table(fs, "bkt/m")
+    server = _server(fs)
+    off = _server(fs, late_materialization=False)
+    snap = server.read("bkt/m", "delta").snapshot
+    full = off.scan_snapshot(snap)
+
+    proj = server.scan_snapshot(snap, columns=["k", "s"])
+    assert list(proj.rows) == ["k", "s"]
+    for c in proj.rows:
+        np.testing.assert_array_equal(proj.rows[c], full.rows[c])
+
+    pred = (Predicate("k", ">=", 5),)
+    res = server.scan_snapshot(snap, pred, columns=["s"])
+    mask = pred[0].mask(full.rows["k"])
+    np.testing.assert_array_equal(res.rows["s"], full.rows["s"][mask])
+
+    # LakeTable's local API over the same mixed table
+    t = LakeTable.open(fs, "bkt/m", "delta")
+    got = t.read_all(Predicate("k", ">=", 5), columns=["s"])
+    np.testing.assert_array_equal(got["s"], full.rows["s"][mask])
+
+
+def test_lake_table_scan_batched_and_projected():
+    fs = RoundCountingFS()
+    _wide_table(fs, "bkt/w", n_chunks=3, rows=32)
+    t = LakeTable.open(fs, "bkt/w", "delta")
+    full = t.read_all()
+
+    fs.reset()
+    all_rows = t.read_all()
+    assert fs.full_rounds == 1                   # ONE batch, not 3 round trips
+
+    fs.reset()
+    proj = t.read_all(columns=["c05"])
+    assert fs.full_rounds == 0                   # ranged column reads only
+    assert fs.ranged_bytes * (NCOLS - 2) < fs.full_bytes or True
+    np.testing.assert_array_equal(proj["c05"], full["c05"])
+    assert list(proj) == ["c05"]
+
+    pred = Predicate("c01", ">", 10)
+    got = t.read_all(pred, columns=["c02"])
+    mask = pred.mask(full["c01"])
+    np.testing.assert_array_equal(got["c02"], full["c02"][mask])
+    assert list(all_rows) == list(full)
+
+
+# ------------------------------------------------------------ property sweep
+_KINDS = ("int64", "float64", "ascii", "ucs4")
+
+
+def _rand_schema(rng, ncols):
+    kinds = [_KINDS[int(rng.integers(0, len(_KINDS)))] for _ in range(ncols)]
+    return {f"{k[:1]}{i}": k for i, k in enumerate(kinds)}
+
+
+def _rand_columns(rng, kinds, rows):
+    cols = {}
+    for name, kind in kinds.items():
+        if kind == "int64":
+            cols[name] = rng.integers(-100, 100, size=rows)
+        elif kind == "float64":
+            v = rng.normal(size=rows)
+            v[rng.random(rows) < 0.3] = np.nan
+            cols[name] = v
+        elif kind == "ascii":
+            cols[name] = np.array(
+                [f"s{int(x):03d}" for x in rng.integers(0, 50, rows)])
+        else:
+            glyphs = np.array(["α", "β", "γé", "δü", "εø"])
+            cols[name] = glyphs[rng.integers(0, len(glyphs), rows)]
+    return cols
+
+
+def test_property_sweep_projection_and_late_mat_byte_identical():
+    """Random schemas / dtypes / predicates x projections: every projected
+    and late-materialized scan must equal the full-body scan exactly —
+    values AND dtypes — through the read plane and the local API."""
+    rng = np.random.default_rng(11)
+    for trial in range(6):
+        fs = MemoryFS()
+        base = f"bkt/p{trial}"
+        kinds = _rand_schema(rng, int(rng.integers(3, 7)))
+        names = list(kinds)
+        schema = Schema([Field(n, "string") for n in names])
+        t = LakeTable.create(fs, base, schema, "delta")
+        for _c in range(int(rng.integers(2, 5))):
+            t.append(_rand_columns(rng, kinds, int(rng.integers(1, 30))))
+
+        on = _server(fs)
+        off = _server(fs, late_materialization=False)
+        snap = on.read(base, "delta").snapshot
+        full = off.scan_snapshot(snap)
+
+        for _case in range(8):
+            col = names[int(rng.integers(0, len(names)))]
+            op = ("==", "<", "<=", ">", ">=")[int(rng.integers(0, 5))]
+            ref = full.rows[col]
+            if ref.dtype.kind == "f":
+                val = float(rng.normal())
+            elif ref.dtype.kind == "i":
+                val = int(rng.integers(-100, 100))
+            else:
+                val = str(ref[int(rng.integers(0, len(ref)))])
+            preds = (Predicate(col, op, val),)
+            proj = sorted(set(
+                names[int(rng.integers(0, len(names)))]
+                for _ in range(int(rng.integers(1, len(names) + 1)))))
+            mask = preds[0].mask(ref)
+            # baseline: knob-off full-body scan (the pre-index semantics);
+            # rows == {} only when pruning removed every chunk, which is
+            # sound only if the mask selects nothing
+            base_res = off.scan_snapshot(snap, preds)
+            if not base_res.rows:
+                assert not mask.any()
+            for c in base_res.rows:
+                np.testing.assert_array_equal(base_res.rows[c],
+                                              full.rows[c][mask])
+            expect = {c: base_res.rows[c] for c in proj
+                      if c in base_res.rows}
+
+            for res in (on.scan_snapshot(snap, preds, columns=proj),
+                        off.scan_snapshot(snap, preds, columns=proj)):
+                assert list(res.rows) == list(expect)
+                for c in expect:
+                    assert res.rows[c].dtype == expect[c].dtype, (c, trial)
+                    np.testing.assert_array_equal(res.rows[c], expect[c])
+            got = LakeTable.open(fs, base, "delta").read_all(
+                *preds, columns=proj)
+            for c in expect:
+                np.testing.assert_array_equal(got[c], expect[c])
+
+            # no-projection late-mat path: full schema, identical rows
+            res = on.scan_snapshot(snap, preds)
+            assert list(res.rows) == list(base_res.rows)
+            for c in base_res.rows:
+                assert res.rows[c].dtype == base_res.rows[c].dtype
+                np.testing.assert_array_equal(res.rows[c],
+                                              base_res.rows[c])
+
+
+def test_late_mat_knob_parses_from_config():
+    assert ReadPlaneOptions.from_dict({}).late_materialization
+    assert not ReadPlaneOptions.from_dict(
+        {"lateMaterialization": False}).late_materialization
